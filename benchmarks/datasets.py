@@ -1,0 +1,85 @@
+"""Benchmark corpus + index construction with on-disk caching.
+
+Default scale is CPU-sized (n=12k, d=256); env knobs REPRO_BENCH_N /
+REPRO_BENCH_D / REPRO_BENCH_Q scale to paper size (105k x 2048, 10k queries)
+on a larger machine. All benchmarks share one cache so the expensive builds
+(brute kNN graph, HNSW) run once.
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import time
+
+import numpy as np
+
+from repro.core.atlas import AnchorAtlas
+from repro.core.graph import build_alpha_knn
+from repro.core.hnsw import HNSW
+from repro.core.search import FiberIndex
+from repro.data.ground_truth import attach_ground_truth
+from repro.data.synth import SynthSpec, make_dataset, make_queries
+
+CACHE = os.environ.get("REPRO_BENCH_CACHE", "results/bench_cache")
+
+N = int(os.environ.get("REPRO_BENCH_N", 40_000))
+D = int(os.environ.get("REPRO_BENCH_D", 256))
+NQ = int(os.environ.get("REPRO_BENCH_Q", 400))
+K = 25
+GRAPH_K = int(os.environ.get("REPRO_BENCH_GRAPH_K", 48))
+R_MAX = 3 * GRAPH_K
+HNSW_M = int(os.environ.get("REPRO_BENCH_HNSW_M", 24))
+
+
+def _cached(name, builder):
+    os.makedirs(CACHE, exist_ok=True)
+    path = os.path.join(CACHE, f"{name}_n{N}_d{D}_q{NQ}.pkl")
+    if os.path.exists(path):
+        with open(path, "rb") as f:
+            return pickle.load(f)
+    t0 = time.time()
+    obj = builder()
+    print(f"[build] {name}: {time.time() - t0:.1f}s")
+    with open(path, "wb") as f:
+        pickle.dump(obj, f)
+    return obj
+
+
+def get_dataset():
+    return _cached("dataset", lambda: make_dataset(
+        SynthSpec(n=N, d=D, n_components=max(32, N // 300), n_fields=24,
+                  seed=0)))
+
+
+def get_queries(ds):
+    def build():
+        qs = make_queries(ds, n_queries=NQ, seed=1)
+        attach_ground_truth(ds, qs, k=K)
+        return qs
+    return _cached("queries", build)
+
+
+def get_alpha_graph(ds):
+    return _cached("alpha_knn", lambda: build_alpha_knn(
+        ds.vectors, k=GRAPH_K, r_max=R_MAX, alpha=1.2))
+
+
+def get_hnsw(ds):
+    return _cached("hnsw", lambda: HNSW.build(
+        ds.vectors, m=HNSW_M, ef_construction=80, seed=0))
+
+
+def get_atlas(ds):
+    return _cached("atlas", lambda: AnchorAtlas.build(ds, seed=0))
+
+
+def get_indexes():
+    ds = get_dataset()
+    qs = get_queries(ds)
+    atlas = get_atlas(ds)
+    alpha = get_alpha_graph(ds)
+    hnsw = get_hnsw(ds)
+    idx_alpha = FiberIndex(ds.vectors, ds.metadata, alpha, atlas)
+    idx_hnsw_base = FiberIndex(ds.vectors, ds.metadata, hnsw.base_graph(),
+                               atlas)
+    return ds, qs, idx_alpha, idx_hnsw_base, hnsw

@@ -1,0 +1,69 @@
+"""Kernel + engine microbenchmarks (CPU wall-clock, interpret-mode Pallas
+noted as such: TPU timing is out of scope in this container — see
+EXPERIMENTS.md §Roofline for the TPU-side analysis)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.batched.engine import BatchedEngine, BatchedParams
+from repro.core.search import SearchParams, run_queries
+from repro.kernels import ref
+from benchmarks.datasets import K, get_indexes
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)  # warm/compile
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e6  # us
+
+
+def kernel_microbench():
+    """us/call for the jnp oracle paths (the XLA-compiled reference that the
+    Pallas kernels must beat on TPU; interpret-mode Pallas timings are not
+    meaningful and are excluded)."""
+    rng = np.random.default_rng(0)
+    n, d, Q, R = 8192, 256, 32, 128
+    corpus = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    queries = jnp.asarray(rng.standard_normal((Q, d)), jnp.float32)
+    bitmap = jnp.asarray(rng.integers(0, 2**32, (Q, n // 32)), jnp.uint32)
+    ids = jnp.asarray(rng.integers(0, n, (Q, R)), jnp.int32)
+    meta = jnp.asarray(rng.integers(-1, 40, (n, 24)), jnp.int32)
+    fields = jnp.asarray([0, 5, -1, -1], jnp.int32)
+    allowed = jnp.asarray(rng.integers(0, 2, (4, 256)), jnp.uint8)
+    out = {}
+    f1 = jax.jit(lambda a, b, c: ref.masked_cosine_topk(a, b, c, K))
+    out["masked_cosine_topk_ref"] = _time(f1, queries, corpus, bitmap)
+    f2 = jax.jit(ref.fiber_expand)
+    out["fiber_expand_ref"] = _time(f2, queries, corpus, ids, bitmap)
+    f3 = jax.jit(ref.filter_eval)
+    out["filter_eval_ref"] = _time(f3, meta, fields, allowed)
+    return out
+
+
+def engine_bench():
+    """Measured QPS: sequential reference vs batched lockstep engine."""
+    ds, qs, idx_alpha, _, _ = get_indexes()
+    sub = qs[:128]
+    t0 = time.time()
+    ids_ref, _ = run_queries(idx_alpha, sub,
+                             SearchParams(k=K, walk="guided", beam_width=2))
+    t_ref = time.time() - t0
+    eng = BatchedEngine(idx_alpha, BatchedParams(k=K, beam_width=4))
+    eng.search(sub[:8])  # compile
+    t0 = time.time()
+    ids_b, _ = eng.search(sub)
+    t_b = time.time() - t0
+    from repro.data.ground_truth import recall_at_k
+    rec_ref = float(np.mean([recall_at_k(i, q.gt_ids)
+                             for i, q in zip(ids_ref, sub)]))
+    rec_b = float(np.mean([recall_at_k(np.asarray(i), q.gt_ids)
+                           for i, q in zip(ids_b, sub)]))
+    return {"reference_qps": len(sub) / t_ref, "reference_recall": rec_ref,
+            "batched_qps": len(sub) / t_b, "batched_recall": rec_b}

@@ -1,0 +1,110 @@
+"""Benchmark driver: one section per paper table + kernel/engine benches.
+
+Prints ``name,us_per_call,derived`` CSV lines (per harness contract) plus
+human-readable tables, and writes results/benchmarks.json for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+
+def _csv(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.1f},{derived}")
+
+
+def main() -> None:
+    from benchmarks import tables as T
+    from benchmarks.kernel_bench import engine_bench, kernel_microbench
+
+    results: dict = {}
+    t_all = time.time()
+
+    t0 = time.time()
+    results["table2"] = T.table2_recall()
+    print("\n== Table 2: Recall@25 (vs HNSW baselines) ==")
+    print(f"{'method':26s} {'recall':>7s} {'>=0.8':>6s} {'=1.0':>6s} "
+          f"{'zero':>6s} {'ms/q':>7s}")
+    for m, r in results["table2"].items():
+        print(f"{m:26s} {r['recall']:7.3f} {r['ge08']:6.1%} {r['eq1']:6.1%} "
+              f"{r['zero']:6.2%} {r['ms']:7.2f}")
+        _csv(f"table2/{m}", r["ms"] * 1000, f"recall={r['recall']:.3f}")
+    print(f"[table2 {time.time()-t0:.0f}s]")
+
+    t0 = time.time()
+    results["table3"] = T.table3_walk_stats()
+    print("\n== Table 3: Walk statistics ==")
+    for m, r in results["table3"].items():
+        prog = " ".join(f"w{j}={v:.3f}" for j, v in
+                        r["recall_after_walk"].items())
+        print(f"{m:12s} walks={r['mean_walks']:.2f} "
+              f"1walk={r['resolved_1walk']:.1%} hops={r['mean_hops']:.1f} "
+              f"recall={r['recall']:.3f} | {prog}")
+        _csv(f"table3/{m}", r["mean_hops"], f"walks={r['mean_walks']:.2f}")
+    print(f"[table3 {time.time()-t0:.0f}s]")
+
+    t0 = time.time()
+    run = T.stall_analysis_run()
+    results["table4"] = T.table4_regimes(run)
+    print("\n== Table 4: Regimes by selectivity (guided B=4) ==")
+    print(f"{'bin':>9s} {'N':>4s} {'recall':>7s} {'hops':>7s} {'walks':>6s} "
+          f"{'cut':>6s} {'fold':>6s} {'basin':>6s}")
+    for row in results["table4"]:
+        print(f"{row['bin']:>9s} {row['n']:4d} {row['recall']:7.3f} "
+              f"{row['hops']:7.1f} {row['walks']:6.2f} "
+              f"{row['topological_cut']:6.1%} {row['geometric_fold']:6.1%} "
+              f"{row['genuine_basin']:6.1%}")
+        _csv(f"table4/{row['bin']}", row["hops"],
+             f"recall={row['recall']:.3f}")
+
+    results["table5"] = T.table5_termination(run)
+    print("\n== Table 5: Termination reasons by selectivity ==")
+    print(f"{'bin':>9s} {'early':>7s} {'stall':>7s} {'maxhop':>7s} "
+          f"{'conv':>7s}")
+    for row in results["table5"]:
+        print(f"{row['bin']:>9s} {row['early_stop']:7.1%} "
+              f"{row['stall_budget']:7.1%} {row['max_hops']:7.1%} "
+              f"{row['converged']:7.1%}")
+
+    results["table6"] = T.table6_diagnostics(run)
+    print("\n== Table 6: Stall-point diagnostics by regime ==")
+    print(f"{'regime':16s} {'count':>6s} {'rho':>8s} {'|B-|':>6s} "
+          f"{'drift':>8s} {'V(x*)':>7s} {'recall':>7s}")
+    for reg, r in results["table6"].items():
+        print(f"{reg:16s} {r['count']:6d} {r['rho']:8.4f} {r['b_minus']:6.1f} "
+              f"{r['drift']:8.4f} {r['potential']:7.4f} {r['recall']:7.3f}")
+    print(f"[tables 4-6 {time.time()-t0:.0f}s]")
+
+    results["graph_stats"] = T.graph_statistics()
+    print("\n== Graph statistics (paper §6) ==")
+    for g, s in results["graph_stats"].items():
+        print(f"{g:10s} edges={s['total_edges']:>9d} "
+              f"mean={s['mean_degree']:6.1f} min={s['min_degree']:3d} "
+              f"max={s['max_degree']:4d} mem={s['memory_mb']:6.1f}MB")
+
+    t0 = time.time()
+    results["kernels"] = kernel_microbench()
+    print("\n== Kernel microbench (XLA-compiled oracle path, CPU) ==")
+    for k, us in results["kernels"].items():
+        print(f"{k:28s} {us:10.1f} us/call")
+        _csv(f"kernel/{k}", us, "cpu_oracle")
+    results["engine"] = engine_bench()
+    e = results["engine"]
+    print("\n== Engine: sequential vs batched (CPU measured) ==")
+    print(f"reference: {e['reference_qps']:7.1f} qps recall={e['reference_recall']:.3f}")
+    print(f"batched:   {e['batched_qps']:7.1f} qps recall={e['batched_recall']:.3f}")
+    _csv("engine/reference", 1e6 / e["reference_qps"],
+         f"recall={e['reference_recall']:.3f}")
+    _csv("engine/batched", 1e6 / e["batched_qps"],
+         f"recall={e['batched_recall']:.3f}")
+    print(f"[kernels+engine {time.time()-t0:.0f}s]")
+
+    os.makedirs("results", exist_ok=True)
+    with open("results/benchmarks.json", "w") as f:
+        json.dump(results, f, indent=1, default=float)
+    print(f"\n[total {time.time()-t_all:.0f}s] -> results/benchmarks.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+"""Paper-table benchmarks (Tables 2-6 + the §6 graph-statistics table).
+
+Each function mirrors one table of the paper and returns rows that run.py
+prints (and EXPERIMENTS.md records). Latencies are wall-clock on this host
+(single CPU core) — the paper's were Apple-M1 Python, so we compare method
+ORDERINGS and recall levels, not absolute ms.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.graph import graph_stats
+from repro.core.search import SearchParams, search
+from repro.core.stall import (aggregate_stalls, regimes_by_selectivity,
+                              termination_by_selectivity)
+from repro.data.ground_truth import recall_at_k
+from benchmarks.datasets import K, get_indexes
+
+
+def _run_method(fn, queries):
+    recs, lat = [], []
+    for qi, q in enumerate(queries):
+        t0 = time.time()
+        ids = fn(qi, q)
+        lat.append(time.time() - t0)
+        recs.append(recall_at_k(np.asarray(ids), q.gt_ids))
+    recs = np.asarray(recs)
+    return {"recall": float(recs.mean()),
+            "ge08": float((recs >= 0.8).mean()),
+            "eq1": float((recs == 1.0).mean()),
+            "zero": float((recs == 0.0).mean()),
+            "ms": float(np.mean(lat) * 1000)}
+
+
+def table2_recall(ef: int = 400):
+    """Paper Table 2: methods x recall@25 / >=0.8 / =1.0 / zero / latency."""
+    ds, qs, idx_alpha, idx_hnsw, hnsw = get_indexes()
+    meta = ds.metadata
+    methods = {}
+    methods["hnsw_post_filter"] = lambda qi, q: hnsw.search_post_filter(
+        q.vector, q.predicate, meta, K, ef=ef)
+    methods["hnsw_traversal_filter"] = lambda qi, q: \
+        hnsw.search_traversal_filter(q.vector, q.predicate, meta, K, ef=ef)
+
+    def mk(idx, walk, B):
+        p = SearchParams(k=K, walk=walk, beam_width=B)
+        return lambda qi, q: search(idx, q.vector, q.predicate, p,
+                                    seed=qi)[0]
+
+    methods["beam_hnsw_base_B40"] = mk(idx_hnsw, "beam", 40)
+    methods["guided_hnsw_base_B2"] = mk(idx_hnsw, "guided", 2)
+    methods["beam_alpha_knn_B40"] = mk(idx_alpha, "beam", 40)
+    methods["guided_alpha_knn_B2"] = mk(idx_alpha, "guided", 2)
+    # beyond-paper: + post-walk refinement sweeps (EXPERIMENTS.md §Perf)
+    p_ref = SearchParams(k=K, walk="guided", beam_width=2, refine_rounds=2)
+    methods["guided_refine2_beyond"] = lambda qi, q: search(
+        idx_alpha, q.vector, q.predicate, p_ref, seed=qi)[0]
+    return {name: _run_method(fn, qs) for name, fn in methods.items()}
+
+
+def table3_walk_stats():
+    """Paper Table 3: walk statistics + recall progression by walk count."""
+    ds, qs, idx_alpha, _, _ = get_indexes()
+    out = {}
+    for name, walk, B in (("guided_B2", "guided", 2), ("beam_B40", "beam", 40)):
+        p = SearchParams(k=K, walk=walk, beam_width=B)
+        n_walks, hops, prog = [], [], {}
+        recs = []
+        for qi, q in enumerate(qs):
+            ids, _, st = search(idx_alpha, q.vector, q.predicate, p,
+                                gt_ids=q.gt_ids, seed=qi)
+            recs.append(recall_at_k(ids, q.gt_ids))
+            n_walks.append(st.n_walks)
+            hops.append(st.hops)
+            for j, r in enumerate(st.recall_after_walk):
+                prog.setdefault(j + 1, []).append(r)
+        out[name] = {
+            "mean_walks": float(np.mean(n_walks)),
+            "resolved_1walk": float(np.mean(np.asarray(n_walks) == 1)),
+            "mean_hops": float(np.mean(hops)),
+            "recall": float(np.mean(recs)),
+            "recall_after_walk": {j: float(np.mean(v))
+                                  for j, v in sorted(prog.items())},
+        }
+    return out
+
+
+def stall_analysis_run(beam_width: int = 4, max_hops: int = 500):
+    """Shared run behind Tables 4, 5, 6 (paper §8.2 methodology: B=4,
+    max hops 500 so the stall budget can trigger independently)."""
+    ds, qs, idx_alpha, _, _ = get_indexes()
+    p = SearchParams(k=K, walk="guided", beam_width=beam_width,
+                     max_hops=max_hops)
+    stats, recalls, sels = [], [], []
+    for qi, q in enumerate(qs):
+        ids, _, st = search(idx_alpha, q.vector, q.predicate, p, seed=qi)
+        stats.append(st)
+        recalls.append(recall_at_k(ids, q.gt_ids))
+        sels.append(q.selectivity)
+    return stats, sels, recalls
+
+
+def table4_regimes(run):
+    stats, sels, recalls = run
+    return regimes_by_selectivity(stats, sels, recalls)
+
+
+def table5_termination(run):
+    stats, sels, _ = run
+    return termination_by_selectivity(stats, sels)
+
+
+def table6_diagnostics(run):
+    stats, sels, recalls = run
+    return aggregate_stalls(stats, sels, recalls)
+
+
+def graph_statistics():
+    """Paper §6 graph-statistics table."""
+    ds, _, idx_alpha, idx_hnsw, _ = get_indexes()
+    return {"alpha_knn": graph_stats(idx_alpha.graph),
+            "hnsw_base": graph_stats(idx_hnsw.graph)}

@@ -1,0 +1,8 @@
+"""Llama-3.2-1B: small dense GQA [hf:meta-llama/Llama-3.2-1B]."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama3.2-1b", family="dense",
+    n_layers=16, d_model=2048, n_heads=32, n_kv_heads=8, d_ff=8192,
+    vocab_size=128256, head_dim=64, rope_theta=500_000.0,
+)

@@ -1,0 +1,9 @@
+from repro.core.atlas import AnchorAtlas
+from repro.core.graph import Graph, build_alpha_knn, graph_stats
+from repro.core.hnsw import HNSW
+from repro.core.search import FiberIndex, SearchParams, run_queries, search
+from repro.core.types import Dataset, FilterPredicate, Query, SearchStats, WalkStats
+
+__all__ = ["AnchorAtlas", "Graph", "build_alpha_knn", "graph_stats", "HNSW",
+           "FiberIndex", "SearchParams", "run_queries", "search", "Dataset",
+           "FilterPredicate", "Query", "SearchStats", "WalkStats"]

@@ -1,0 +1,117 @@
+"""Structure-matched synthetic corpus generator.
+
+The paper evaluates on H&M product embeddings (105,100 x 2048, 24 categorical
+fields). Offline we reproduce the *structural* properties that drive the
+fiber phenomenon (DESIGN.md §1):
+
+* unit vectors from a mixture of anisotropic Gaussians on the sphere
+  ("product groups" = geometric clusters);
+* categorical metadata correlated with mixture component, so fibers are
+  geometrically localized and a selective filter's nearest points can be far
+  from the unfiltered nearest points;
+* Zipfian value frequencies, giving filter selectivities from <0.1% to >20%.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.types import Dataset, FilterPredicate, Query, normalize
+
+
+@dataclasses.dataclass(frozen=True)
+class SynthSpec:
+    n: int = 20_000
+    d: int = 256
+    n_components: int = 64        # geometric mixture components
+    n_fields: int = 24
+    noise: float = 0.35           # within-component spread (relative)
+    corr: float = 0.85            # P(field value determined by component)
+    radial_lognorm: float = 0.6   # per-point radial spread (density gradient:
+    # real embedding clusters have cores+peripheries; this is what makes
+    # drift<0 fiber-descent valleys exist at all — see DESIGN.md §1)
+    seed: int = 0
+
+
+def _zipf_probs(v: int, a: float = 1.1) -> np.ndarray:
+    p = 1.0 / np.arange(1, v + 1) ** a
+    return p / p.sum()
+
+
+def make_dataset(spec: SynthSpec = SynthSpec()) -> Dataset:
+    rng = np.random.default_rng(spec.seed)
+    C = spec.n_components
+    centers = normalize(rng.standard_normal((C, spec.d)))
+    # Zipfian component sizes: a few big product groups, many small ones.
+    comp_p = _zipf_probs(C, a=1.05)
+    comp = rng.choice(C, size=spec.n, p=comp_p)
+    # anisotropic noise: per-component random scale in [0.5, 1.5] * spec.noise
+    scales = (0.5 + rng.random(C)) * spec.noise
+    # per-point radial factor: lognormal gives cluster cores + peripheries
+    radial = rng.lognormal(mean=-0.5 * spec.radial_lognorm**2,
+                           sigma=spec.radial_lognorm, size=spec.n)
+    eps = rng.standard_normal((spec.n, spec.d))
+    x = centers[comp] + eps * (scales[comp] * radial)[:, None]
+    vectors = normalize(x)
+
+    field_names, vocab_sizes = [], []
+    metadata = np.empty((spec.n, spec.n_fields), dtype=np.int32)
+    for f in range(spec.n_fields):
+        # vocab sizes vary like real product metadata (2 .. 200 values)
+        v = int(rng.choice([2, 4, 8, 16, 32, 64, 128, 200]))
+        field_names.append(f"field_{f}")
+        vocab_sizes.append(v)
+        # component -> canonical value map (many-to-one when v < C)
+        comp_to_val = rng.integers(0, v, size=C)
+        correlated = comp_to_val[comp]
+        random_vals = rng.choice(v, size=spec.n, p=_zipf_probs(v))
+        use_corr = rng.random(spec.n) < spec.corr
+        col = np.where(use_corr, correlated, random_vals).astype(np.int32)
+        # sparse metadata: ~3% of entries unpopulated (-1), as in real corpora
+        col[rng.random(spec.n) < 0.03] = -1
+        metadata[:, f] = col
+    return Dataset(vectors, metadata, field_names, vocab_sizes)
+
+
+def make_queries(
+    ds: Dataset,
+    n_queries: int = 500,
+    max_clauses: int = 3,
+    seed: int = 1,
+    query_noise: float = 0.15,
+    cross_fiber_frac: float = 0.5,
+) -> list[Query]:
+    """Queries = perturbed corpus points; filters sampled to span selectivity.
+
+    With probability ``cross_fiber_frac`` the filter values are taken from a
+    *different* random point's metadata — the hard case where the filtered
+    neighbours are geometrically distant from the unfiltered ones (paper §7
+    "why HNSW fails").
+    """
+    rng = np.random.default_rng(seed)
+    out: list[Query] = []
+    while len(out) < n_queries:
+        i = int(rng.integers(ds.n))
+        q = normalize(ds.vectors[i] + rng.standard_normal(ds.d) * query_noise)
+        src = int(rng.integers(ds.n)) if rng.random() < cross_fiber_frac else i
+        n_clauses = int(rng.integers(1, max_clauses + 1))
+        fields = rng.choice(ds.n_fields, size=n_clauses, replace=False)
+        clauses = {}
+        for f in fields:
+            v = int(ds.metadata[src, f])
+            if v < 0:  # unpopulated — pick any populated value
+                col = ds.metadata[:, f]
+                pop = col[col >= 0]
+                if pop.size == 0:
+                    continue
+                v = int(pop[rng.integers(pop.size)])
+            clauses[int(f)] = [v]
+        if not clauses:
+            continue
+        pred = FilterPredicate.make(clauses)
+        sel = float(pred.mask(ds.metadata).mean())
+        if sel <= 0.0:
+            continue  # empty fiber: no ground truth exists
+        out.append(Query(vector=q, predicate=pred, selectivity=sel))
+    return out

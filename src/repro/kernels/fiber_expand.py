@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: graph-expansion distance computation with scalar-
+prefetched neighbor indices (the PagedAttention indirection pattern).
+
+The per-expansion hot loop of the paper (§5.3: O(R·d) similarity dominates)
+becomes: neighbor ids ride in SMEM via PrefetchScalarGridSpec; the BlockSpec
+index_map selects corpus ROW ids[q, r] directly, so each grid step DMAs one
+(1, d) row from HBM into VMEM — no (Q, R, d) gather is ever materialized in
+HBM. The dot runs against the query block resident in VMEM; the filter test
+is a bitmap word probe. Padded ids (-1) and filtered-out neighbors yield
+-inf, exactly matching ref.fiber_expand.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -3.4e38  # python float: jnp constants would be captured tracers in the kernel
+
+
+def _kernel(ids_ref, q_ref, row_ref, bm_ref, out_ref):
+    qi = pl.program_id(0)
+    ri = pl.program_id(1)
+    nid = ids_ref[qi, ri]
+    qv = q_ref[...].astype(jnp.float32)           # (1, d)
+    row = row_ref[...].astype(jnp.float32)        # (1, d)
+    sim = jnp.sum(qv * row)
+    word = bm_ref[0, nid >> 5]
+    bit = ((word >> (nid & 31).astype(jnp.uint32)) & 1) == 1
+    ok = (nid >= 0) & bit
+    out_ref[0, 0] = jnp.where(ok, sim, NEG)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fiber_expand(q_vecs, corpus, ids, bitmap, *, interpret: bool = True):
+    """q_vecs (Q, d); corpus (n, d); ids (Q, R) i32 (-1 pad);
+    bitmap (Q, n_words) uint32 -> sims (Q, R) f32 (-inf masked)."""
+    q, d = q_vecs.shape
+    r = ids.shape[1]
+    n_words = bitmap.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(q, r),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda qi, ri, ids_ref: (qi, 0)),
+            # the indirection: corpus row chosen by the prefetched id
+            pl.BlockSpec(
+                (1, d),
+                lambda qi, ri, ids_ref: (jnp.maximum(ids_ref[qi, ri], 0), 0)),
+            pl.BlockSpec((1, n_words), lambda qi, ri, ids_ref: (qi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda qi, ri, ids_ref: (qi, ri)),
+    )
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((q, r), jnp.float32),
+        interpret=interpret,
+    )(ids, q_vecs, corpus, bitmap)
+    return jnp.where(out <= NEG / 2, -jnp.inf, out)

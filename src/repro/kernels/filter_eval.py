@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: conjunctive-predicate evaluation -> packed bitmap.
+
+Turns (metadata codes x predicate) into the per-query filter bitmap consumed
+by the other kernels and the batched engine. The paper's per-node O(|S|)
+dict lookup becomes a corpus-sweep VPU pass (DESIGN.md §3): per tile of
+rows, each clause tests membership via an iota-compare against a dense
+allowed-value table (no gathers — TPU-friendly), and the pass bools pack
+into uint32 words with a shift-weighted row sum.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(meta_ref, fields_ref, allowed_ref, out_ref, *, n_clauses: int,
+            v_cap: int):
+    meta = meta_ref[...]                       # (Tn, F) int32
+    tn = meta.shape[0]
+    ok = jnp.ones((tn,), jnp.bool_)
+    viota = jax.lax.broadcasted_iota(jnp.int32, (tn, v_cap), 1)
+    for c in range(n_clauses):                 # static, small (<= 4 clauses)
+        f = fields_ref[0, c]
+        active = f >= 0
+        col = jax.lax.dynamic_index_in_dim(meta, jnp.maximum(f, 0), axis=1,
+                                           keepdims=False)   # (Tn,)
+        hit_tbl = allowed_ref[c, :] > 0                       # (v_cap,)
+        eq = viota == col[:, None]
+        clause_ok = jnp.any(eq & hit_tbl[None, :], axis=1)
+        clause_ok &= (col >= 0) & (col < v_cap)
+        ok = jnp.where(active, ok & clause_ok, ok)
+    bits = ok.reshape(tn // 32, 32).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jax.lax.broadcasted_iota(
+        jnp.uint32, (tn // 32, 32), 1))
+    out_ref[...] = jnp.sum(bits * weights, axis=1, keepdims=True).astype(
+        jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("tn", "interpret"))
+def filter_eval(metadata, fields, allowed, *, tn: int = 1024,
+                interpret: bool = True):
+    """metadata (n, F) i32; fields (C,) i32 (-1 inactive);
+    allowed (C, V_cap) uint8 -> (ceil(n/32),) uint32."""
+    n, F = metadata.shape
+    C, v_cap = allowed.shape
+    n_pad = (-n) % tn
+    # padded rows get code -1 -> fail all active clauses -> bit 0
+    meta_p = jnp.pad(metadata, ((0, n_pad), (0, 0)), constant_values=-1)
+    grid = ((n + n_pad) // tn,)
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_clauses=C, v_cap=v_cap),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tn, F), lambda i: (i, 0)),
+            pl.BlockSpec((1, C), lambda i: (0, 0)),
+            pl.BlockSpec((C, v_cap), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tn // 32, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(((n + n_pad) // 32, 1), jnp.uint32),
+        interpret=interpret,
+    )(meta_p, fields.reshape(1, -1), allowed)
+    return out[: (n + 31) // 32, 0]

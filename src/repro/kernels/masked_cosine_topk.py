@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: tiled corpus x query cosine scores with filter-bitmap
+masking and a streaming top-k merge (flash-style running state).
+
+Grid: (Q_tiles, N_tiles); N is the sequential minor dimension, so the output
+block for a query tile is revisited across corpus tiles and carries the
+running top-k (the standard revisiting-accumulator pattern). Corpus tiles
+are MXU-aligned (Nt x d), scores are (Qt, Nt) fp32 in VMEM, and masked lanes
+never leave VMEM — the filter costs one shifted-word unpack per tile.
+
+This is the anchor-scoring / ground-truth / in-cluster brute-force hot spot
+of the paper (§4.2, §6); O(Q·n·d) work with O(Qt·(Nt+k)) VMEM working set.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -3.4e38  # python float: jnp constants would be captured tracers in the kernel
+
+
+def _kernel(q_ref, x_ref, bm_ref, sims_ref, ids_ref, *, k: int, nt: int,
+            n_total: int):
+    ni = pl.program_id(1)
+    qb = q_ref[...].astype(jnp.float32)            # (Qt, d)
+    xb = x_ref[...].astype(jnp.float32)            # (Nt, d)
+    scores = jax.lax.dot_general(
+        qb, xb, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)        # (Qt, Nt)
+    # unpack this tile's filter bits: words (Qt, Nt/32) -> (Qt, Nt)
+    words = bm_ref[...]                            # (Qt, Nt//32) uint32
+    qt = scores.shape[0]
+    wrep = jnp.broadcast_to(words[:, :, None], (qt, nt // 32, 32)
+                            ).reshape(qt, nt)
+    lane = jax.lax.broadcasted_iota(jnp.uint32, (qt, nt), 1) & 31
+    bits = ((wrep >> lane) & 1) == 1
+    col = ni * nt + jax.lax.broadcasted_iota(jnp.int32, (qt, nt), 1)
+    valid = bits & (col < n_total)
+    scores = jnp.where(valid, scores, NEG)
+    # running top-k merge with the revisited output block
+    tile_sims, tile_idx = jax.lax.top_k(scores, k)           # (Qt, k)
+    tile_ids = jnp.take_along_axis(col, tile_idx, axis=1)
+
+    @pl.when(ni == 0)
+    def _init():
+        sims_ref[...] = jnp.full_like(sims_ref, NEG)
+        ids_ref[...] = jnp.full_like(ids_ref, -1)
+
+    cur_sims = sims_ref[...]
+    cur_ids = ids_ref[...]
+    all_sims = jnp.concatenate([cur_sims, tile_sims], axis=1)  # (Qt, 2k)
+    all_ids = jnp.concatenate([cur_ids, tile_ids], axis=1)
+    new_sims, sel = jax.lax.top_k(all_sims, k)
+    sims_ref[...] = new_sims
+    ids_ref[...] = jnp.take_along_axis(all_ids, sel, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "qt", "nt", "interpret"))
+def masked_cosine_topk(queries, corpus, bitmap, *, k: int = 32,
+                       qt: int = 8, nt: int = 512, interpret: bool = True):
+    """queries (Q, d), corpus (n, d), bitmap (Q, ceil(n/32)) uint32 ->
+    (sims (Q, k) f32 desc, ids (Q, k) i32, -1 when unfilled)."""
+    q, d = queries.shape
+    n = corpus.shape[0]
+    qt = min(qt, q)
+    # pad corpus rows to a tile multiple; bitmap words to match
+    n_pad = (-n) % nt
+    q_pad = (-q) % qt
+    corpus_p = jnp.pad(corpus, ((0, n_pad), (0, 0)))
+    queries_p = jnp.pad(queries, ((0, q_pad), (0, 0)))
+    words_needed = (n + n_pad) // 32
+    bm = jnp.pad(bitmap, ((0, q_pad), (0, words_needed - bitmap.shape[1])))
+    grid = ((q + q_pad) // qt, (n + n_pad) // nt)
+    sims, ids = pl.pallas_call(
+        functools.partial(_kernel, k=k, nt=nt, n_total=n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((qt, d), lambda qi, ni: (qi, 0)),
+            pl.BlockSpec((nt, d), lambda qi, ni: (ni, 0)),
+            pl.BlockSpec((qt, nt // 32), lambda qi, ni: (qi, ni)),
+        ],
+        out_specs=[
+            pl.BlockSpec((qt, k), lambda qi, ni: (qi, 0)),   # revisited
+            pl.BlockSpec((qt, k), lambda qi, ni: (qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q + q_pad, k), jnp.float32),
+            jax.ShapeDtypeStruct((q + q_pad, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(queries_p, corpus_p, bm)
+    sims = jnp.where(sims <= NEG / 2, -jnp.inf, sims)
+    return sims[:q], ids[:q]

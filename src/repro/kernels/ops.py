@@ -1,0 +1,54 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU the kernels execute in interpret mode (the kernel body runs under the
+Pallas interpreter — bit-exact semantics, no Mosaic); on TPU they lower to
+Mosaic. ``predicate_tables`` converts a core FilterPredicate into the dense
+clause tables the filter_eval kernel consumes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.fiber_expand import fiber_expand as _fiber_expand
+from repro.kernels.filter_eval import filter_eval as _filter_eval
+from repro.kernels.masked_cosine_topk import \
+    masked_cosine_topk as _masked_cosine_topk
+
+MAX_CLAUSES = 4
+V_CAP = 256
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def masked_cosine_topk(queries, corpus, bitmap, *, k: int = 32, qt: int = 8,
+                       nt: int = 512):
+    return _masked_cosine_topk(queries, corpus, bitmap, k=k, qt=qt, nt=nt,
+                               interpret=_interpret())
+
+
+def fiber_expand(q_vecs, corpus, ids, bitmap):
+    return _fiber_expand(q_vecs, corpus, ids, bitmap,
+                         interpret=_interpret())
+
+
+def filter_eval(metadata, fields, allowed, *, tn: int = 1024):
+    return _filter_eval(metadata, fields, allowed, tn=tn,
+                        interpret=_interpret())
+
+
+def predicate_tables(pred, n_fields: int,
+                     max_clauses: int = MAX_CLAUSES,
+                     v_cap: int = V_CAP) -> tuple[np.ndarray, np.ndarray]:
+    """FilterPredicate -> (fields (C,) i32, allowed (C, v_cap) u8)."""
+    fields = np.full(max_clauses, -1, np.int32)
+    allowed = np.zeros((max_clauses, v_cap), np.uint8)
+    for i, (f, vals) in enumerate(pred.clauses[:max_clauses]):
+        fields[i] = f
+        for v in vals:
+            if 0 <= v < v_cap:
+                allowed[i, v] = 1
+    return fields, allowed

@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for every kernel in this package (the allclose targets).
+
+Semantics contract shared by kernel and oracle:
+* masked_cosine_topk: scores = Q @ X^T; positions whose filter bit is 0 (or
+  column >= n) score -inf; per-query top-k (sims desc, ids).
+* fiber_expand: sims[q, r] = q_vec[q] . X[ids[q, r]] when id >= 0 AND the
+  id's filter bit is set, else -inf.
+* filter_eval: packed uint32 bitmap of conjunctive predicate over int codes;
+  code -1 (unpopulated) fails any clause on that field.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = jnp.float32(-jnp.inf)
+
+
+def bitmap_get(bitmap: jax.Array, idx: jax.Array) -> jax.Array:
+    """bitmap: (..., n_words) uint32; idx: (...,) int32 -> bool."""
+    word = jnp.take_along_axis(
+        bitmap, (idx >> 5).astype(jnp.int32)[..., None] if idx.ndim == bitmap.ndim - 1
+        else (idx >> 5).astype(jnp.int32), axis=-1)
+    if word.ndim > idx.ndim:
+        word = word[..., 0]
+    return ((word >> (idx & 31).astype(jnp.uint32)) & 1).astype(bool)
+
+
+def masked_cosine_topk(queries: jax.Array, corpus: jax.Array,
+                       bitmap: jax.Array, k: int):
+    """queries (Q, d); corpus (n, d); bitmap (Q, ceil(n/32)) uint32.
+
+    Returns (sims (Q, k) f32 desc, ids (Q, k) i32; -inf/-1 where fewer than
+    k pass)."""
+    n = corpus.shape[0]
+    scores = (queries.astype(jnp.float32) @ corpus.astype(jnp.float32).T)
+    cols = jnp.arange(n, dtype=jnp.int32)
+    words = bitmap[:, cols >> 5]
+    bits = ((words >> (cols & 31).astype(jnp.uint32)) & 1).astype(bool)
+    scores = jnp.where(bits, scores, NEG)
+    sims, ids = jax.lax.top_k(scores, k)
+    ids = jnp.where(jnp.isfinite(sims), ids, -1).astype(jnp.int32)
+    return sims, ids
+
+
+def fiber_expand(q_vecs: jax.Array, corpus: jax.Array, ids: jax.Array,
+                 bitmap: jax.Array):
+    """q_vecs (Q, d); corpus (n, d); ids (Q, R) i32 (-1 pad);
+    bitmap (Q, n_words) uint32. Returns sims (Q, R) f32 (-inf masked)."""
+    safe = jnp.maximum(ids, 0)
+    rows = corpus[safe].astype(jnp.float32)            # (Q, R, d)
+    sims = jnp.einsum("qrd,qd->qr", rows, q_vecs.astype(jnp.float32))
+    words = jnp.take_along_axis(bitmap, (safe >> 5).astype(jnp.int32), axis=1)
+    bits = ((words >> (safe & 31).astype(jnp.uint32)) & 1).astype(bool)
+    ok = (ids >= 0) & bits
+    return jnp.where(ok, sims, NEG)
+
+
+def filter_eval(metadata: jax.Array, fields: jax.Array, allowed: jax.Array):
+    """metadata (n, F) i32; fields (C,) i32 (-1 = inactive clause);
+    allowed (C, V_cap) uint8 (1 = value allowed). Returns (ceil(n/32),)
+    uint32 packed bitmap (row-major bit i -> point i)."""
+    n = metadata.shape[0]
+    v_cap = allowed.shape[1]
+    ok = jnp.ones((n,), bool)
+    for c in range(fields.shape[0]):
+        f = fields[c]
+        active = f >= 0
+        vals = metadata[:, jnp.maximum(f, 0)]
+        in_range = (vals >= 0) & (vals < v_cap)
+        hit = allowed[c, jnp.clip(vals, 0, v_cap - 1)] > 0
+        clause_ok = in_range & hit
+        ok = jnp.where(active, ok & clause_ok, ok)
+    pad = (-n) % 32
+    okp = jnp.pad(ok, (0, pad))
+    bits = okp.reshape(-1, 32).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    return (bits * weights).sum(axis=1).astype(jnp.uint32)

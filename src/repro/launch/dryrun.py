@@ -1,0 +1,204 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# The two lines above MUST run before any jax-importing module: jax locks the
+# device count at first init, and the production dry-run needs 512 host
+# placeholder devices to build the 16x16 / 2x16x16 meshes.
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import SHAPES, cell_plan, get_config  # noqa: E402
+from repro.configs.base import ARCH_NAMES  # noqa: E402
+from repro.launch import roofline as rf  # noqa: E402
+from repro.launch.mesh import data_axis_names, make_production_mesh  # noqa: E402
+from repro.launch.shardings import (batch_shardings, cache_shardings,  # noqa: E402
+                                    opt_shardings, param_shardings)
+from repro.models.kvcache import cache_specs  # noqa: E402
+from repro.models.transformer import (ShardEnv, decode_step, forward_loss,  # noqa: E402
+                                      init_params, prefill)
+from repro.optim.adamw import AdamWConfig, init_opt_state, make_train_step  # noqa: E402
+
+
+def _serve_dtype(specs):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, jnp.bfloat16 if s.dtype == jnp.float32 else s.dtype), specs)
+
+
+def resolve_policy(policy: str, cfg) -> tuple[str, bool]:
+    """Returns (param policy, zero1). "auto" = the optimized configuration
+    from the §Perf iterations: pure-DP for sub-4B archs, ZeRO-1 always."""
+    if policy == "auto":
+        # sp (Megatron-style seq-parallel constraints) measured WORSE under
+        # XLA SPMD + scan/remat (layout-thrash f32 all-gathers, §Perf iter 3)
+        return ("dp" if cfg.param_count() < 4e9 else "tp"), True
+    if policy == "zero1":
+        return "tp", True
+    if policy in ("dp", "sp"):
+        return policy, True
+    return "tp", False
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               policy: str = "tp"):
+    """Lower + compile one (arch x shape x mesh) cell; returns records."""
+    cfg = get_config(arch)
+    pol, zero1 = resolve_policy(policy, cfg)
+    spec = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    env = ShardEnv(mesh, data_axes=data_axis_names(mesh), policy=pol)
+    p_specs = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    b_specs = cfg.input_specs(shape_name)
+    p_sh = param_shardings(cfg, mesh, p_specs, policy=pol)
+    b_sh = batch_shardings(cfg, mesh, b_specs, policy=pol)
+    scalar = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        if spec.kind == "train":
+            o_specs = jax.eval_shape(init_opt_state, p_specs)
+            o_sh = opt_shardings(cfg, mesh, o_specs, policy=pol, zero1=zero1)
+            opt_cfg = AdamWConfig(
+                grad_sync_dtype="bf16" if policy == "auto" else "f32")
+            step = make_train_step(cfg, env, opt_cfg)
+            metr_sh = {"loss": scalar, "grad_norm": scalar, "lr": scalar}
+            fn = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                         out_shardings=(p_sh, o_sh, metr_sh),
+                         donate_argnums=(0, 1))
+            lowered = fn.lower(p_specs, o_specs, b_specs)
+        elif spec.kind == "prefill":
+            sp = _serve_dtype(p_specs)
+            fn = jax.jit(lambda p, b: prefill(p, b, cfg, env),
+                         in_shardings=(p_sh, b_sh))
+            lowered = fn.lower(sp, b_specs)
+        else:  # decode
+            sp = _serve_dtype(p_specs)
+            c_specs = cache_specs(cfg, spec)
+            c_sh = cache_shardings(cfg, mesh, c_specs)
+            fn = jax.jit(lambda p, c, b: decode_step(p, c, b, cfg, env),
+                         in_shardings=(p_sh, c_sh, b_sh),
+                         out_shardings=(None, c_sh), donate_argnums=(1,))
+            lowered = fn.lower(sp, c_specs, b_specs)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    print(ma)  # proves it fits (bytes per device)
+    ca = compiled.cost_analysis()
+    print({k: ca[k] for k in ("flops", "bytes accessed") if k in ca})
+    colls = rf.parse_collectives(compiled.as_text())
+    n_chips = 512 if multi_pod else 256
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": n_chips,
+        "kind": spec.kind,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_bytes": (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+                           + ma.output_size_in_bytes - ma.alias_size_in_bytes),
+        },
+        "flops_per_chip": ca.get("flops", 0.0),
+        "bytes_per_chip": ca.get("bytes accessed", 0.0),
+        "collectives": colls,
+        "model_flops_global": rf.model_flops(cfg, spec),
+    }
+    terms = rf.roofline_terms(rec["flops_per_chip"], rec["bytes_per_chip"],
+                              colls["wire_bytes"])
+    rec["roofline"] = {
+        "compute_s": terms.compute_s, "memory_s": terms.memory_s,
+        "collective_s": terms.collective_s, "dominant": terms.dominant,
+        "useful_flops_ratio":
+            rec["model_flops_global"] / max(rec["flops_per_chip"] * n_chips, 1.0),
+    }
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--accounting", action="store_true",
+                    help="scan-corrected cost pass (launch/accounting.py)")
+    ap.add_argument("--policy", default="tp",
+                    choices=["tp", "zero1", "auto", "dp", "sp"],
+                    help="sharding policy (tp=baseline, auto=optimized)")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        for a in ARCH_NAMES:
+            cells += [(a, s) for s in cell_plan(a)]
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, args.shape)]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    if args.accounting:
+        from repro.launch.accounting import accounting_cell
+        out_dir = ("results/accounting" if args.policy == "tp"
+                   else f"results/accounting_{args.policy}")
+        os.makedirs(out_dir, exist_ok=True)
+        failures = 0
+        for arch, shape in cells:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'multi' if mp else 'single'}"
+                path = os.path.join(out_dir, tag + ".json")
+                if os.path.exists(path):
+                    print(f"[skip] {tag}")
+                    continue
+                print(f"[acct] {tag}")
+                try:
+                    rec = accounting_cell(arch, shape, mp, policy=args.policy)
+                    with open(path, "w") as f:
+                        json.dump(rec, f, indent=1)
+                    print(f"  flops={rec['flops']:.3e}/chip bytes={rec['bytes']:.3e} "
+                          f"wire={rec['wire_bytes']:.3e} ({rec['accounting_s']}s)")
+                except Exception as e:  # noqa: BLE001
+                    failures += 1
+                    with open(path + ".err", "w") as f:
+                        f.write(traceback.format_exc())
+                    print(f"  FAIL: {e}")
+        raise SystemExit(1 if failures else 0)
+
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch}__{shape}__{'multi' if mp else 'single'}"
+            path = os.path.join(args.out, tag.replace("/", "_") + ".json")
+            if os.path.exists(path):
+                print(f"[skip] {tag} (cached)")
+                continue
+            print(f"[cell] {tag}")
+            try:
+                rec = lower_cell(arch, shape, mp, policy=args.policy)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                r = rec["roofline"]
+                print(f"  ok: compute={r['compute_s']:.4f}s memory={r['memory_s']:.4f}s "
+                      f"collective={r['collective_s']:.4f}s dominant={r['dominant']} "
+                      f"(compile {rec['compile_s']}s)")
+            except Exception as e:  # noqa: BLE001 — record and continue sweep
+                failures += 1
+                with open(path + ".err", "w") as f:
+                    f.write(traceback.format_exc())
+                print(f"  FAIL: {e}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

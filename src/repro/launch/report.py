@@ -1,0 +1,110 @@
+"""Render the EXPERIMENTS.md roofline tables from results/dryrun +
+results/accounting JSONs.
+
+    PYTHONPATH=src python -m repro.launch.report [--mesh 16x16] [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.launch.roofline import HBM_BW, LINK_BW, N_LINKS, PEAK_FLOPS
+
+
+def load_cells(dryrun_dir="results/dryrun", acct_dir="results/accounting"):
+    cells = {}
+    for p in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        r = json.load(open(p))
+        key = (r["arch"], r["shape"], r["mesh"])
+        cells[key] = r
+        tag = os.path.basename(p).replace(".json", "")
+        ap = os.path.join(acct_dir, tag + ".json")
+        if os.path.exists(ap):
+            r["accounting"] = json.load(open(ap))
+    return cells
+
+
+def terms(rec):
+    """Roofline terms preferring scan-corrected accounting numbers.
+
+    memory_lo = analytic minimum HBM traffic; memory_hi = HLO bytes-accessed
+    (fused-operand upper bound). The dominant call and roofline fraction use
+    (compute, memory_lo, collective); memory_hi is a diagnostic column.
+    """
+    from repro.configs.base import SHAPES, get_config
+    acct = rec.get("accounting")
+    if acct:
+        flops, byts, wire = acct["flops"], acct["bytes"], acct["wire_bytes"]
+        src = "acct"
+    else:
+        flops, byts, wire = (rec["flops_per_chip"], rec["bytes_per_chip"],
+                             rec["collectives"]["wire_bytes"])
+        src = "hlo-raw"
+    from repro.launch.roofline import analytic_hbm_bytes
+    cfg = get_config(rec["arch"])
+    spec = SHAPES[rec["shape"]]
+    mem_lo_b = analytic_hbm_bytes(cfg, spec, rec["chips"])
+    comp = flops / PEAK_FLOPS
+    mem_lo = mem_lo_b / HBM_BW
+    mem_hi = byts / HBM_BW
+    coll = wire / (N_LINKS * LINK_BW)
+    dom = max((comp, "compute"), (mem_lo, "memory"), (coll, "collective"))[1]
+    useful = rec["model_flops_global"] / max(flops * rec["chips"], 1.0)
+    bound = max(comp, mem_lo, coll)
+    mfu = rec["model_flops_global"] / (rec["chips"] * PEAK_FLOPS * bound)
+    return dict(compute_s=comp, memory_s=mem_lo, memory_hi_s=mem_hi,
+                collective_s=coll, dominant=dom, useful=useful, src=src,
+                bound_s=bound, mfu=mfu,
+                roofline_frac=comp / max(bound, 1e-30))
+
+
+def render(mesh: str = "16x16", md: bool = False,
+           dryrun_dir: str = "results/dryrun",
+           acct_dir: str = "results/accounting") -> str:
+    cells = load_cells(dryrun_dir, acct_dir)
+    rows = []
+    for (arch, shape, m), rec in sorted(cells.items()):
+        if m != mesh:
+            continue
+        t = terms(rec)
+        rows.append((arch, shape, t, rec))
+    sep = " | " if md else " "
+    lines = []
+    hdr = (f"{'arch':<18}{sep}{'shape':<12}{sep}{'compute_s':>9}{sep}"
+           f"{'mem_lo_s':>9}{sep}{'mem_hi_s':>9}{sep}{'coll_s':>9}{sep}"
+           f"{'dominant':>10}{sep}{'useful':>7}{sep}{'MFU':>7}{sep}"
+           f"{'roofline':>8}{sep}{'GiB/dev':>8}")
+    lines.append(hdr)
+    if md:
+        lines.insert(0, "| " + hdr + " |")
+        lines[0] = lines[0]
+    for arch, shape, t, rec in rows:
+        peak = rec["memory"]["peak_bytes"] / 2**30
+        line = (f"{arch:<18}{sep}{shape:<12}{sep}{t['compute_s']:>9.4f}{sep}"
+                f"{t['memory_s']:>9.4f}{sep}{t['memory_hi_s']:>9.4f}{sep}"
+                f"{t['collective_s']:>9.4f}{sep}"
+                f"{t['dominant']:>10}{sep}{t['useful']:>7.3f}{sep}"
+                f"{t['mfu']:>7.2%}{sep}"
+                f"{t['roofline_frac']:>8.2%}{sep}{peak:>8.1f}")
+        lines.append(line)
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--md", action="store_true")
+    ap.add_argument("--opt", action="store_true",
+                    help="render the optimized-policy (auto) results")
+    args = ap.parse_args()
+    if args.opt:
+        print(render(args.mesh, args.md, "results/dryrun_auto",
+                     "results/accounting_auto"))
+    else:
+        print(render(args.mesh, args.md))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,201 @@
+"""Roofline-term derivation from compiled dry-run artifacts (DESIGN.md §6).
+
+    compute    = FLOPs_per_chip / peak_FLOPs
+    memory     = bytes_per_chip / HBM_bw
+    collective = wire_bytes_per_chip / (links * link_bw)
+
+``cost_analysis()`` on the partitioned module reports per-chip FLOPs/bytes.
+Collective wire bytes are parsed from the compiled HLO with ring-algorithm
+per-device costs:
+    all-gather / all-to-all:  out_bytes * (n-1)/n
+    reduce-scatter:           out_bytes * (n-1)
+    all-reduce:               2 * bytes * (n-1)/n
+    collective-permute:       bytes
+Group size n is parsed from ``replica_groups`` (iota or explicit form).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+# TPU v5e-class constants (per task spec)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+N_LINKS = 1                  # conservative single-link assumption
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(.*?)\s*(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_EXPL_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(segment: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(segment):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _EXPL_GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-op-kind wire bytes per device + op counts from compiled HLO."""
+    bytes_by_kind: dict[str, float] = {}
+    count_by_kind: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        out_seg, kind = m.group(1), m.group(2)
+        b = _shape_bytes(out_seg)
+        n = max(_group_size(line), 2)
+        if kind in ("all-gather", "all-to-all"):
+            wire = b * (n - 1) / n
+        elif kind == "reduce-scatter":
+            wire = b * (n - 1)
+        elif kind == "all-reduce":
+            wire = 2 * b * (n - 1) / n
+        else:  # collective-permute
+            wire = b
+        bytes_by_kind[kind] = bytes_by_kind.get(kind, 0.0) + wire
+        count_by_kind[kind] = count_by_kind.get(kind, 0) + 1
+    return {"wire_bytes": sum(bytes_by_kind.values()),
+            "by_kind": bytes_by_kind, "counts": count_by_kind}
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_chip: float
+    bytes_per_chip: float
+    wire_bytes_per_chip: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)  # type: ignore[arg-type]
+
+    @property
+    def bound_time_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+def roofline_terms(flops_per_chip: float, bytes_per_chip: float,
+                   wire_bytes_per_chip: float) -> RooflineTerms:
+    return RooflineTerms(
+        compute_s=flops_per_chip / PEAK_FLOPS,
+        memory_s=bytes_per_chip / HBM_BW,
+        collective_s=wire_bytes_per_chip / (N_LINKS * LINK_BW),
+        flops_per_chip=flops_per_chip,
+        bytes_per_chip=bytes_per_chip,
+        wire_bytes_per_chip=wire_bytes_per_chip,
+    )
+
+
+def model_flops(cfg, spec, n_tokens: int | None = None) -> float:
+    """MODEL_FLOPS = 6·N(_active)·D for the step's token count."""
+    from repro.configs.base import model_flops_per_token
+    if n_tokens is None:
+        if spec.kind == "train":
+            n_tokens = spec.global_batch * spec.seq_len
+        elif spec.kind == "prefill":
+            n_tokens = spec.global_batch * spec.seq_len
+        else:  # decode: one token per sequence
+            n_tokens = spec.global_batch
+    f = model_flops_per_token(cfg) * n_tokens
+    if spec.kind == "train":
+        return f  # 6ND already counts fwd+bwd
+    return f / 3.0  # forward-only: 2ND
+
+
+# ---------------------------------------------------------------------------
+# Analytic minimum HBM traffic (lower bound; the HLO "bytes accessed" number
+# is an upper bound that counts every fused operand). True traffic lies in
+# between; EXPERIMENTS.md reports both and takes the dominant-term call from
+# (compute, memory_lower, collective) with memory_upper as diagnostic.
+# ---------------------------------------------------------------------------
+
+def analytic_hbm_bytes(cfg, spec, n_chips: int, tp: int = 16) -> float:
+    """Per-chip minimum HBM bytes for one step.
+
+    Model: params stream once per pass (fwd + bwd + remat-fwd for train);
+    optimizer state read+write fp32 (train); layer-boundary residual
+    activations write+read with a 2x intra-layer spill allowance; decode adds
+    KV-cache/state streaming; embeddings stream only the gathered rows.
+    """
+    from repro.configs.base import SHAPES
+    d = cfg.d_model
+    L = cfg.n_layers + (cfg.n_enc_layers or 0)
+    N_total = cfg.param_count()
+    N_active = cfg.param_count(active_only=True)
+    emb_params = 2 * cfg.vocab_size * d
+    body = max(N_total - emb_params, 1)
+    body_active = max(N_active - emb_params, 1)
+    kind = spec.kind
+    B, S = spec.global_batch, spec.seq_len
+    dp = n_chips // tp
+    tokens_loc = (B * S) / dp if kind != "decode" else B / dp
+    if B < dp:
+        tokens_loc = (B * S) if kind != "decode" else B  # unsharded batch
+
+    if kind == "train":
+        p_bytes = body / tp * 4
+        param_traffic = 3 * p_bytes            # fwd + bwd + remat re-read
+        opt_traffic = 4 * (body / tp) * 4 * 2  # m,v read+write fp32 + grads
+        act = 4 * L * tokens_loc * d * 2       # boundaries w+r, 2x spill
+        vocab_t = tokens_loc * d * 2 * 4       # embed rows + logits stream
+        return param_traffic + opt_traffic + act + vocab_t
+    if kind == "prefill":
+        p_bytes = body_active / tp * 2         # bf16 serving weights
+        act = 2 * L * tokens_loc * d * 2
+        cache_w = _cache_bytes(cfg, spec, tp, dp)
+        return p_bytes + act + cache_w + tokens_loc * d * 2
+    # decode: weights stream once per step + cache read
+    p_bytes = body_active / tp * 2
+    cache = _cache_bytes(cfg, spec, tp, dp)
+    return p_bytes + cache + tokens_loc * d * 2 * L / max(L, 1)
+
+
+def _cache_bytes(cfg, spec, tp: int, dp: int) -> float:
+    """Per-chip KV-cache/state bytes touched by one decode/prefill step."""
+    B, S = spec.global_batch, spec.seq_len
+    b_loc = B / dp if B >= dp else B
+    if cfg.family == "ssm":
+        H = cfg.d_model // cfg.rwkv_head_size
+        return (cfg.n_layers * b_loc
+                * (H * cfg.rwkv_head_size ** 2 * 4 + 2 * cfg.d_model * 2))
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    if cfg.family == "hybrid":
+        W = min(cfg.sliding_window or S, S)
+        ssm = cfg.n_layers * b_loc * (cfg.ssm_expand * cfg.d_model
+                                      * cfg.ssm_state * 4)
+        return cfg.n_layers * b_loc * 2 * W * kv * hd * 2 + ssm
+    seq = S if spec.kind == "decode" else S
+    shard = tp if B < dp else 1  # long-context cache is seq-sharded
+    return cfg.n_layers * b_loc * 2 * seq * kv * hd * 2 / shard

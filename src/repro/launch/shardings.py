@@ -1,0 +1,181 @@
+"""PartitionSpec assignment for params / optimizer state / batches / caches.
+
+Policy (DESIGN.md §5): TP over ``model`` for attention heads, FFN hidden,
+MoE expert dim, unembed vocab; DP over (``pod``, ``data``) for batch dims.
+Tensors whose natural axis is not divisible by the TP degree fall back to
+replication on that axis (e.g. smollm 9 heads, gemma3 kv=1) — recorded
+honestly rather than padded.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.launch.mesh import data_axis_names
+
+
+def _div(n: int, by: int) -> bool:
+    return by > 0 and n % by == 0
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+    return out
+
+
+def param_pspec(path, leaf, cfg: ArchConfig, n_model: int) -> P:
+    names = _path_names(path)
+    name = names[-1] if names else ""
+    stacked = any(n in ("layers", "enc_layers") for n in names)
+    lead = (None,) if stacked else ()
+    shape = leaf.shape
+    in_attn = any(n in ("attn", "cross") for n in names)
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+
+    if name == "unembed":
+        return P("model" if _div(shape[0], n_model) else None, None)
+    if name == "embed":
+        return P(None, None)  # replicated input table (gather stays local)
+    if in_attn:
+        if name == "wq":
+            return P(*lead, None, "model" if _div(H, n_model) else None)
+        if name in ("wk", "wv"):
+            return P(*lead, None, "model" if _div(KV, n_model) else None)
+        if name == "wo":
+            return P(*lead, "model" if _div(H, n_model) else None, None)
+    if name in ("w1", "w3", "w2"):  # MoE experts: (E, d, f)/(E, f, d)
+        e_ax = len(lead)
+        return P(*lead, "model" if _div(shape[e_ax], n_model) else None,
+                 None, None)
+    if name == "router":
+        return P(*lead, None, None)
+    if name in ("w_gate", "w_up", "cm_k", "in_proj", "wr", "wk", "wv", "wg",
+                "x_proj"):
+        last = shape[-1]
+        return P(*((None,) * (len(shape) - 1)),
+                 "model" if _div(last, n_model) else None)
+    if name in ("w_down", "cm_v", "out_proj", "wo", "cm_r", "dt_proj"):
+        first_ax = len(lead)
+        return P(*lead, "model" if _div(shape[first_ax], n_model) else None,
+                 *((None,) * (len(shape) - len(lead) - 1)))
+    return P(*((None,) * len(shape)))  # norms, scalars, small tensors
+
+
+def param_shardings(cfg: ArchConfig, mesh, specs, policy: str = "tp"):
+    """policy="tp": tensor-parallel rules above. policy="dp": replicate all
+    params (pure data parallel — right for sub-~4B archs where TP-sharded
+    projections cost more in per-layer collectives than they save; §Perf)."""
+    n_model = mesh.shape["model"]
+    if policy == "dp":
+        return jax.tree.map(
+            lambda leaf: NamedSharding(mesh, P(*((None,) * len(leaf.shape)))),
+            specs)
+    # "sp" keeps TP param layout; only activations change (ShardEnv.act3)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, param_pspec(path, leaf, cfg,
+                                                           n_model)),
+        specs)
+
+
+def _all_axes(mesh) -> tuple:
+    return tuple(mesh.axis_names)
+
+
+def _zero1_spec(base: P, shape, mesh) -> P:
+    """Extend a param spec with the dp axes on the first divisible free dim
+    (ZeRO-1: optimizer state sharded over data parallelism)."""
+    dp = data_axis_names(mesh)
+    n_dp = 1
+    for a in dp:
+        n_dp *= mesh.shape[a]
+    spec = list(base) + [None] * (len(shape) - len(base))
+    for i, (s, cur) in enumerate(zip(shape, spec)):
+        if cur is None and s % n_dp == 0 and s > 0:
+            spec[i] = dp
+            return P(*spec)
+    return base
+
+
+def opt_shardings(cfg: ArchConfig, mesh, opt_specs, policy: str = "tp",
+                  zero1: bool = False):
+    """m/v mirror the param specs; step replicated. zero1=True additionally
+    shards m/v over the data axes (ZeRO-1) — params stay in their layout,
+    XLA inserts the reduce-scatter/all-gather pair around the update."""
+    n_model = mesh.shape["model"]
+
+    def assign(path, leaf):
+        names = _path_names(path)
+        if names and names[0] == "step":
+            return NamedSharding(mesh, P())
+        base = (P(*((None,) * len(leaf.shape))) if policy == "dp"
+                else param_pspec(path[1:], leaf, cfg, n_model))  # sp == tp
+        if zero1:
+            base = _zero1_spec(base, leaf.shape, mesh)
+        return NamedSharding(mesh, base)
+
+    return jax.tree_util.tree_map_with_path(assign, opt_specs)
+
+
+def batch_shardings(cfg: ArchConfig, mesh, batch_specs, policy: str = "tp"):
+    dp = data_axis_names(mesh)
+    n_data = 1
+    for a in dp:
+        n_data *= mesh.shape[a]
+    full = _all_axes(mesh)
+    n_full = 1
+    for a in full:
+        n_full *= mesh.shape[a]
+
+    def assign(path, leaf):
+        b = leaf.shape[0]
+        if policy == "dp" and _div(b, n_full):
+            return NamedSharding(mesh, P(full, *((None,) * (len(leaf.shape) - 1))))
+        lead = dp if _div(b, n_data) else None
+        return NamedSharding(mesh, P(lead, *((None,) * (len(leaf.shape) - 1))))
+
+    return jax.tree_util.tree_map_with_path(assign, batch_specs)
+
+
+def cache_shardings(cfg: ArchConfig, mesh, cache_spec_tree):
+    dp = data_axis_names(mesh)
+    n_data = 1
+    for a in dp:
+        n_data *= mesh.shape[a]
+    n_model = mesh.shape["model"]
+
+    def assign(path, leaf):
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        s = leaf.shape
+        if name == "pos":
+            return NamedSharding(mesh, P())
+        b_ax = dp if _div(s[1], n_data) else None
+        if name in ("k", "v", "ck", "cv"):       # (L, B, S, KV, hd)
+            if b_ax is not None:
+                kv_ax = "model" if _div(s[3], n_model) else None
+                return NamedSharding(mesh, P(None, b_ax, None, kv_ax, None))
+            # batch unshardable (long_500k B=1): shard the cache sequence
+            seq_ax = "model" if _div(s[2], n_model) else None
+            return NamedSharding(mesh, P(None, None, seq_ax, None, None))
+        if name == "ssm":                        # (L, B, d_in, N)
+            return NamedSharding(mesh, P(
+                None, b_ax, "model" if _div(s[2], n_model) else None, None))
+        if name == "conv":                       # (L, B, 3, d_in)
+            return NamedSharding(mesh, P(
+                None, b_ax, None, "model" if _div(s[3], n_model) else None))
+        if name == "wkv":                        # (L, B, H, N, N)
+            return NamedSharding(mesh, P(
+                None, b_ax, "model" if _div(s[2], n_model) else None,
+                None, None))
+        if name in ("shift_tm", "shift_cm"):     # (L, B, d)
+            return NamedSharding(mesh, P(None, b_ax, None))
+        return NamedSharding(mesh, P(*((None,) * len(s))))
+
+    return jax.tree_util.tree_map_with_path(assign, cache_spec_tree)

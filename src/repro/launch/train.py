@@ -1,0 +1,59 @@
+"""Training launcher CLI.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
+        --steps 50 [--full] [--devices data,model]
+
+Local meshes run on the host; the production mesh path is exercised by the
+dry-run (launch/dryrun.py) since this container has one physical device.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config, reduced_config
+from repro.data.tokens import TokenPipeline
+from repro.launch.mesh import make_local_mesh
+from repro.models.transformer import ShardEnv, init_params
+from repro.optim.adamw import AdamWConfig, init_opt_state, make_train_step
+from repro.train.loop import LoopConfig, TrainLoop
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch) if args.full else reduced_config(args.arch)
+    env = ShardEnv(make_local_mesh())
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    step = jax.jit(make_train_step(cfg, env, AdamWConfig(
+        peak_lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+        total_steps=args.steps)))
+    pipe = TokenPipeline(vocab_size=cfg.vocab_size, batch=args.batch,
+                         seq_len=args.seq, seed=0, frontend=cfg.frontend,
+                         d_model=cfg.d_model)
+    loop = TrainLoop(LoopConfig(total_steps=args.steps,
+                                ckpt_every=args.ckpt_every,
+                                ckpt_dir=args.ckpt_dir), step, pipe, params,
+                     opt)
+    loop.install_signal_handlers()
+    start = loop.try_resume()
+    out = loop.run(start_step=start)
+    for m in out["metrics"]:
+        print(f"step {m['step']:5d} loss {m['loss']:.4f}")
+    print(f"finished at step {out['last_step']} "
+          f"(preempted={out['preempted']})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from repro.models.transformer import (ShardEnv, decode_step, forward_loss,
+                                      init_params, param_specs, prefill)
+from repro.models.kvcache import cache_specs, init_cache
+
+__all__ = ["ShardEnv", "decode_step", "forward_loss", "init_params",
+           "param_specs", "prefill", "cache_specs", "init_cache"]

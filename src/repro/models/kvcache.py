@@ -1,0 +1,51 @@
+"""Decode-state structures per architecture family, as plain dict pytrees of
+stacked (leading L) arrays, plus ShapeDtypeStruct specs for the dry-run.
+
+* dense/moe/vlm: full-length K/V per layer (SWA layers mask to the window;
+  ring-buffering local layers is a recorded §Perf optimization)
+* hybrid (hymba): ring K/V of window size + mamba (ssm, conv-tail) state
+* ssm (rwkv6): matrix-valued wkv state + token-shift tails — O(1) in S
+* audio (whisper): decoder self K/V + frozen cross K/V over encoder output
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models.common import CDT
+
+
+def cache_specs(cfg: ArchConfig, spec: ShapeSpec) -> dict:
+    sds = jax.ShapeDtypeStruct
+    B, S = spec.global_batch, spec.seq_len
+    L, KV, hd, d = cfg.n_layers, cfg.n_kv_heads, cfg.hd, cfg.d_model
+    out: dict = {"pos": sds((), jnp.int32)}
+    if cfg.family == "ssm":
+        H, N = d // cfg.rwkv_head_size, cfg.rwkv_head_size
+        out.update(wkv=sds((L, B, H, N, N), jnp.float32),
+                   shift_tm=sds((L, B, d), CDT),
+                   shift_cm=sds((L, B, d), CDT))
+        return out
+    if cfg.family == "hybrid":
+        W = min(cfg.sliding_window or S, S)
+        d_in = cfg.ssm_expand * d
+        out.update(k=sds((L, B, W, KV, hd), CDT),
+                   v=sds((L, B, W, KV, hd), CDT),
+                   ssm=sds((L, B, d_in, cfg.ssm_state), jnp.float32),
+                   conv=sds((L, B, 3, d_in), CDT))
+        return out
+    if cfg.family == "audio":
+        Ld = cfg.n_layers
+        out.update(k=sds((Ld, B, cfg.max_decode_len, KV, hd), CDT),
+                   v=sds((Ld, B, cfg.max_decode_len, KV, hd), CDT),
+                   ck=sds((Ld, B, S, KV, hd), CDT),
+                   cv=sds((Ld, B, S, KV, hd), CDT))
+        return out
+    out.update(k=sds((L, B, S, KV, hd), CDT), v=sds((L, B, S, KV, hd), CDT))
+    return out
+
+
+def init_cache(cfg: ArchConfig, spec: ShapeSpec) -> dict:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_specs(cfg, spec))

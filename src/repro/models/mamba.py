@@ -1,0 +1,110 @@
+"""Selective SSM (Mamba-style) head used by the Hymba hybrid block.
+
+Training uses a two-level scan: an outer scan over time chunks (rematted)
+and an inner step scan carrying the (B, d_in, N) diagonal state — compile-
+compact and memory-bounded. Decode carries (ssm state, conv tail).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import settings
+from repro.models.common import CDT, init_dense
+
+CONV_K = 4
+
+
+def init_mamba(key, d_model: int, d_in: int, n_state: int, dt_rank: int):
+    ks = jax.random.split(key, 8)
+    a = jnp.tile(jnp.arange(1, n_state + 1, dtype=jnp.float32), (d_in, 1))
+    return {
+        "in_proj": init_dense(ks[0], (d_model, 2 * d_in)),
+        "conv_w": init_dense(ks[1], (CONV_K, d_in), scale=0.5),
+        "conv_b": jnp.zeros((d_in,), jnp.float32),
+        "x_proj": init_dense(ks[2], (d_in, dt_rank + 2 * n_state)),
+        "dt_proj": init_dense(ks[3], (dt_rank, d_in)),
+        "dt_bias": jnp.full((d_in,), -4.0, jnp.float32),  # softplus ~ small dt
+        "A_log": jnp.log(a),
+        "D": jnp.ones((d_in,), jnp.float32),
+        "out_proj": init_dense(ks[4], (d_in, d_model)),
+    }
+
+
+def _ssm_scan(dA, dBx, C, h0):
+    """h_t = dA_t * h_{t-1} + dBx_t ; y_t = C_t · h_t.
+
+    dA, dBx: (B, S, d_in, N); C: (B, S, N). Returns y (B, S, d_in), h_S.
+    """
+    def step(h, inp):
+        da, dbx, c = inp
+        h = da * h + dbx
+        y = jnp.einsum("bdn,bn->bd", h, c)
+        return h, y
+
+    xs = (dA.swapaxes(0, 1), dBx.swapaxes(0, 1), C.swapaxes(0, 1))
+    hS, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1), hS
+
+
+def mamba_forward(params, x, state=None, chunk: int = 256):
+    """x: (B, S, d_model) -> (y (B, S, d_model), state).
+
+    state = (h (B, d_in, N) fp32, conv_tail (B, CONV_K-1, d_in)).
+    """
+    B, S, d_model = x.shape
+    d_in = params["conv_b"].shape[0]
+    n = params["A_log"].shape[1]
+    dt_rank = params["dt_proj"].shape[0]
+
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(x.dtype))
+    xh, z = jnp.split(xz, 2, axis=-1)
+    if state is None:
+        h0 = jnp.zeros((B, d_in, n), jnp.float32)
+        tail = jnp.zeros((B, CONV_K - 1, d_in), x.dtype)
+    else:
+        h0, tail = state
+    # causal depthwise conv (kernel 4) over time
+    xpad = jnp.concatenate([tail, xh], axis=1)
+    conv_w = params["conv_w"].astype(x.dtype)
+    xc = sum(xpad[:, i:i + S] * conv_w[i] for i in range(CONV_K))
+    xc = jax.nn.silu((xc + params["conv_b"].astype(x.dtype)).astype(jnp.float32)).astype(x.dtype)
+    new_tail = xpad[:, S:]
+
+    proj = jnp.einsum("bsd,dk->bsk", xc, params["x_proj"].astype(x.dtype))
+    dt, Bc, Cc = jnp.split(proj, [dt_rank, dt_rank + n], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt, params["dt_proj"].astype(x.dtype))
+        .astype(jnp.float32) + params["dt_bias"])            # (B,S,d_in) fp32
+    A = -jnp.exp(params["A_log"])                            # (d_in, N)
+
+    def _discretize_and_scan(dt_c, xc_c, b_c, c_c, h):
+        # dA/dBx are (B, csz, d_in, N): computed PER CHUNK inside the rematted
+        # body — materializing them full-length is O(S·d_in·N) fp32 (13 GB/dev
+        # at hymba train_4k).
+        dA = jnp.exp(dt_c[..., None] * A)
+        dBx = (dt_c * xc_c.astype(jnp.float32))[..., None] \
+            * b_c.astype(jnp.float32)[:, :, None, :]
+        return _ssm_scan(dA, dBx, c_c.astype(jnp.float32), h)
+
+    if S == 1:  # decode fast-path
+        y, hS = _discretize_and_scan(dt, xc, Bc, Cc, h0)
+    else:
+        nchunk = max(1, S // chunk)
+        csz = S // nchunk
+        assert S % csz == 0
+
+        def chunk_step(h, inp):
+            dt_c, xc_c, b_c, c_c = inp
+            y, h = jax.checkpoint(_discretize_and_scan)(dt_c, xc_c, b_c, c_c, h)
+            return h, y
+
+        resh = lambda t: t.reshape((B, nchunk, csz) + t.shape[2:]).swapaxes(0, 1)
+        hS, ys = jax.lax.scan(
+            chunk_step, h0, (resh(dt), resh(xc), resh(Bc), resh(Cc)),
+            unroll=settings.scan_unroll())
+        y = ys.swapaxes(0, 1).reshape(B, S, d_in)
+    y = y + params["D"] * xc.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", y, params["out_proj"].astype(x.dtype))
+    return out, (hS, new_tail)

@@ -1,0 +1,136 @@
+"""RWKV-6 "Finch": attention-free linear recurrence with DATA-DEPENDENT decay
+(the paper-defining feature, arXiv:2404.05892), matrix-valued per-head state.
+
+Time-mix per head h with head size N:
+    S_t = diag(w_t) S_{t-1} + k_t v_tᵀ
+    y_t = r_t (S_{t-1} + diag(u) k_t v_tᵀ)
+with w_t = exp(-exp(w0 + tanh(x̃ W_a) W_b)) — the LoRA-produced decay.
+Channel-mix: r ⊙ (relu(k x W_k)² W_v) with token shift.
+
+Training uses the same two-level (chunk, step) scan pattern as mamba.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import settings
+from repro.models.common import init_dense
+
+LORA_R = 64
+
+
+def init_rwkv_layer(key, d: int, d_ff: int, head_size: int):
+    ks = jax.random.split(key, 12)
+    H = d // head_size
+    return {
+        # token-shift mix coefficients (static part; Finch adds data-dep LoRA)
+        "mu": init_dense(ks[0], (5, d), scale=0.1),      # r,k,v,g,w
+        "w0": jnp.full((d,), -2.0, jnp.float32),
+        "w_a": init_dense(ks[1], (d, LORA_R), scale=0.01),
+        "w_b": init_dense(ks[2], (LORA_R, d), scale=0.01),
+        "u": init_dense(ks[3], (H, head_size), scale=0.1),   # bonus
+        "wr": init_dense(ks[4], (d, d)),
+        "wk": init_dense(ks[5], (d, d)),
+        "wv": init_dense(ks[6], (d, d)),
+        "wg": init_dense(ks[7], (d, d)),
+        "wo": init_dense(ks[8], (d, d)),
+        "ln_x": jnp.zeros((d,), jnp.float32),            # per-head groupnorm
+        # channel-mix
+        "cm_mu": init_dense(ks[9], (2, d), scale=0.1),   # k, r shifts
+        "cm_k": init_dense(ks[10], (d, d_ff)),
+        "cm_v": init_dense(ks[11], (d_ff, d)),
+        "cm_r": init_dense(jax.random.fold_in(key, 99), (d, d)),
+    }
+
+
+def _shift(x, last):
+    """Token shift: x_{t-1} with ``last`` (B, d) as t=-1. Returns shifted, new last."""
+    prev = jnp.concatenate([last[:, None], x[:, :-1]], axis=1)
+    return prev, x[:, -1]
+
+
+def _wkv_scan(r, k, v, w, u, s0):
+    """r,k,v: (B,S,H,N); w: (B,S,H,N) decay in (0,1); u: (H,N).
+
+    Returns y (B,S,H,N), s_final (B,H,N,N) [fp32]."""
+    def step(s, inp):
+        rt, kt, vt, wt = inp                         # (B,H,N)
+        kv = kt[..., :, None] * vt[..., None, :]     # (B,H,N,N)
+        y = jnp.einsum("bhn,bhnm->bhm", rt, s + u[..., None] * kv)
+        s = wt[..., None] * s + kv
+        return s, y
+
+    xs = tuple(t.swapaxes(0, 1) for t in (r, k, v, w))
+    sF, ys = jax.lax.scan(step, s0, xs)
+    return ys.swapaxes(0, 1), sF
+
+
+def rwkv_time_mix(p, x, state, head_size: int, chunk: int = 256):
+    """x: (B,S,d). state=(shift_last (B,d), wkv (B,H,N,N)) or None."""
+    B, S, d = x.shape
+    H, N = d // head_size, head_size
+    if state is None:
+        last = jnp.zeros((B, d), x.dtype)
+        s0 = jnp.zeros((B, H, N, N), jnp.float32)
+    else:
+        last, s0 = state
+    prev, new_last = _shift(x, last)
+    mu = p["mu"].astype(x.dtype)
+    xr, xk, xv, xg, xw = (x + mu[i] * (prev - x) for i in range(5))
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"].astype(x.dtype))
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"].astype(x.dtype))
+    g = jnp.einsum("bsd,de->bse", xg, p["wg"].astype(x.dtype))
+    # data-dependent decay (LoRA): w in (0,1)
+    lora = jnp.einsum("bsr,rd->bsd",
+                      jnp.tanh(jnp.einsum("bsd,dr->bsr", xw,
+                                          p["w_a"].astype(x.dtype))),
+                      p["w_b"].astype(x.dtype))
+    w = jnp.exp(-jnp.exp(p["w0"] + lora.astype(jnp.float32)))
+
+    hs = lambda t: t.astype(jnp.float32).reshape(B, S, H, N)
+    r4, k4, v4, w4 = hs(r), hs(k), hs(v), w.reshape(B, S, H, N)
+    if S == 1:
+        y, sF = _wkv_scan(r4, k4, v4, w4, p["u"], s0)
+    else:
+        nchunk = max(1, S // chunk)
+        csz = S // nchunk
+        assert S % csz == 0
+        resh = lambda t: t.reshape((B, nchunk, csz) + t.shape[2:]).swapaxes(0, 1)
+
+        def chunk_step(s, inp):
+            rc, kc, vc, wc = inp
+            y, s = jax.checkpoint(_wkv_scan)(rc, kc, vc, wc, p["u"], s)
+            return s, y
+
+        sF, ys = jax.lax.scan(chunk_step, s0,
+                              (resh(r4), resh(k4), resh(v4), resh(w4)),
+                              unroll=settings.scan_unroll())
+        y = ys.swapaxes(0, 1).reshape(B, S, H, N)
+    # per-head groupnorm, then gate + output proj
+    yf = y.reshape(B, S, H, N)
+    mean = yf.mean(-1, keepdims=True)
+    var = yf.var(-1, keepdims=True)
+    yf = (yf - mean) * jax.lax.rsqrt(var + 64e-5)
+    yf = yf.reshape(B, S, d) * (1.0 + p["ln_x"])
+    out = yf.astype(x.dtype) * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", out, p["wo"].astype(x.dtype))
+    return out, (new_last, sF)
+
+
+def rwkv_channel_mix(p, x, state):
+    """state = last token (B, d) or None."""
+    B, S, d = x.shape
+    last = jnp.zeros((B, d), x.dtype) if state is None else state
+    prev, new_last = _shift(x, last)
+    mu = p["cm_mu"].astype(x.dtype)
+    xk = x + mu[0] * (prev - x)
+    xr = x + mu[1] * (prev - x)
+    k = jnp.einsum("bsd,df->bsf", xk, p["cm_k"].astype(x.dtype))
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    kv = jnp.einsum("bsf,fd->bsd", k, p["cm_v"].astype(x.dtype))
+    r = jax.nn.sigmoid(
+        jnp.einsum("bsd,de->bse", xr, p["cm_r"].astype(x.dtype))
+        .astype(jnp.float32)).astype(x.dtype)
+    return r * kv, new_last

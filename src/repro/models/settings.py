@@ -1,0 +1,16 @@
+"""Global model-lowering knobs.
+
+UNROLL_SCANS: when True, layer stacks and attention/SSM chunk scans lower
+with ``unroll=True`` so XLA cost analysis (which counts a while body ONCE,
+not x trip-count) sees every executed op. Used by the dry-run accounting
+pass on reduced-depth variants (launch/accounting.py); never for real runs.
+"""
+UNROLL_SCANS = False
+# accounting-mode attention chunking (coarser blocks keep the unrolled HLO
+# small; block size does not change FLOPs, only op count)
+ACCT_Q_CHUNK = 2048
+ACCT_KV_CHUNK = 4096
+
+
+def scan_unroll() -> bool | int:
+    return True if UNROLL_SCANS else 1

@@ -1,0 +1,483 @@
+"""Architecture-generic LM: init, loss (train), prefill, decode.
+
+One scanned-layer implementation covers all ten assigned architectures via
+family dispatch: dense GQA (llama / minitron / smollm / internvl-backbone),
+local:global sliding-window interleave (gemma3), MoE (dbrx / kimi), hybrid
+attention+mamba (hymba), attention-free rwkv6, and enc-dec (whisper).
+
+Distribution: activations carry explicit sharding constraints; MoE runs
+shard_map all_to_all EP (moe.py). Layer stacks are scanned with remat so the
+HLO stays compact for the 512-device dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import attention as attn_lib
+from repro.models import settings
+from repro.models.common import (CDT, embed_lookup, init_dense, pad_vocab,
+                                 rms_norm, rope, softmax_xent, swiglu,
+                                 unembed_logits)
+from repro.models.kvcache import init_cache
+from repro.models.mamba import init_mamba, mamba_forward
+from repro.models.moe import MoEDims, moe_ffn
+from repro.models.rwkv6 import (init_rwkv_layer, rwkv_channel_mix,
+                                rwkv_time_mix)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardEnv:
+    """Mesh + axis naming; mesh=None disables constraints (pure CPU tests
+    still need a 1x1 mesh for the MoE shard_map).
+
+    policy="tp": TP over model axis (default). policy="dp": pure data
+    parallel — batch shards over ALL mesh axes, params replicated; the right
+    regime for sub-~4B archs (see EXPERIMENTS.md §Perf)."""
+    mesh: Any
+    data_axes: tuple = ("data",)
+    model_axis: str = "model"
+    policy: str = "tp"   # tp | dp | sp (sequence-parallel residual stream)
+
+    @property
+    def n_model(self) -> int:
+        return self.mesh.shape[self.model_axis] if self.mesh is not None else 1
+
+    @property
+    def batch_axes(self) -> tuple:
+        if self.policy == "dp":
+            return tuple(self.data_axes) + (self.model_axis,)
+        return self.data_axes
+
+    def constrain(self, x, spec):
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(self.mesh, spec))
+
+    def _b_axes(self, b: int):
+        ax = self.batch_axes
+        if self.mesh is None:
+            return ax
+        n = 1
+        for a in ax:
+            n *= self.mesh.shape[a]
+        if b % n:
+            return self.data_axes  # fall back when batch won't split
+        return ax
+
+    def dp3(self, x):  # (B, S, d) activations, sequence replicated
+        return self.constrain(x, P(self._b_axes(x.shape[0]), None, None))
+
+    def logits3(self, x):
+        """Logits layout: vocab-sharded under TP; batch-over-everything
+        under DP (the hardcoded TP spec cost a 956 MB collective-permute +
+        activation AR/AG per step on the DP policy — §Perf iteration 4)."""
+        if self.policy == "dp":
+            return self.constrain(
+                x, P(self._b_axes(x.shape[0]), None, None))
+        return self.constrain(x, P(self.data_axes, None, self.model_axis))
+
+    def act3(self, x):
+        """Residual-stream layout. Under "sp" the SEQUENCE dim shards over
+        the model axis (Megatron-SP): consumers all-gather bf16 once and
+        producers reduce-scatter, replacing the f32 activation all-reduces
+        that dominated the kimi/internvl baselines (§Perf iteration 3)."""
+        if self.policy == "sp" and x.shape[1] % max(self.n_model, 1) == 0 \
+                and self.n_model > 1:
+            return self.constrain(
+                x, P(self.data_axes, self.model_axis, None))
+        return self.dp3(x)
+
+    def heads4(self, x):  # (B, S, H, hd): shard heads if divisible
+        h = x.shape[2]
+        if self.policy != "dp" and h % max(self.n_model, 1) == 0                 and self.n_model > 1:
+            return self.constrain(
+                x, P(self.data_axes, None, self.model_axis, None))
+        return self.constrain(
+            x, P(self._b_axes(x.shape[0]), None, None, None))
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_attn(key, cfg: ArchConfig):
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    return {"wq": init_dense(ks[0], (d, H * hd)),
+            "wk": init_dense(ks[1], (d, KV * hd)),
+            "wv": init_dense(ks[2], (d, KV * hd)),
+            "wo": init_dense(ks[3], (H * hd, d))}
+
+
+def _init_ffn(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 3)
+    d, f = cfg.d_model, cfg.d_ff
+    return {"w_gate": init_dense(ks[0], (d, f)),
+            "w_up": init_dense(ks[1], (d, f)),
+            "w_down": init_dense(ks[2], (f, d))}
+
+
+def _init_moe(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 5)
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    p = {"router": init_dense(ks[0], (d, E), scale=0.02),
+         "w1": init_dense(ks[1], (E, d, f)),
+         "w3": init_dense(ks[2], (E, d, f)),
+         "w2": init_dense(ks[3], (E, f, d))}
+    if cfg.n_shared_experts:
+        p["shared"] = _init_ffn(ks[4], dataclasses.replace(
+            cfg, d_ff=cfg.d_ff * cfg.n_shared_experts))
+    return p
+
+
+def _init_layer(key, cfg: ArchConfig, cross: bool = False):
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    p: dict = {"ln1": jnp.zeros((d,), jnp.float32),
+               "ln2": jnp.zeros((d,), jnp.float32)}
+    if cfg.family == "ssm":
+        return {**p, **init_rwkv_layer(ks[0], d, cfg.d_ff, cfg.rwkv_head_size)}
+    p["attn"] = _init_attn(ks[0], cfg)
+    if cross:
+        p["ln_cross"] = jnp.zeros((d,), jnp.float32)
+        p["cross"] = _init_attn(ks[1], cfg)
+    if cfg.family == "hybrid":
+        p["mamba"] = init_mamba(ks[2], d, cfg.ssm_expand * d, cfg.ssm_state,
+                                dt_rank=max(d // 16, 8))
+        p["beta"] = jnp.zeros((2,), jnp.float32)
+    p["ffn"] = _init_moe(ks[3], cfg) if cfg.is_moe else _init_ffn(ks[3], cfg)
+    return p
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    ks = jax.random.split(key, 6)
+    v_pad = pad_vocab(cfg.vocab_size)
+    d = cfg.d_model
+    layer_keys = jax.random.split(ks[0], cfg.n_layers)
+    params = {
+        "unembed": init_dense(ks[1], (v_pad, d), scale=0.02),
+        "final_norm": jnp.zeros((d,), jnp.float32),
+        "layers": jax.vmap(
+            lambda k: _init_layer(k, cfg, cross=cfg.family == "audio")
+        )(layer_keys),
+    }
+    if cfg.frontend != "patch":
+        params["embed"] = init_dense(ks[2], (v_pad, d), scale=0.02)
+    if cfg.n_enc_layers:
+        enc_keys = jax.random.split(ks[3], cfg.n_enc_layers)
+        params["enc_layers"] = jax.vmap(
+            lambda k: _init_layer(k, cfg))(enc_keys)
+        params["enc_final_norm"] = jnp.zeros((d,), jnp.float32)
+    return params
+
+
+def param_specs(cfg: ArchConfig):
+    """Parameter ShapeDtypeStructs without allocating (dry-run path)."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+# ---------------------------------------------------------------------------
+# layer bodies
+# ---------------------------------------------------------------------------
+
+def _layer_windows(cfg: ArchConfig):
+    """Per-layer attention window (0 = full/global)."""
+    import numpy as np
+    L = cfg.n_layers
+    if cfg.local_global_ratio:  # gemma3: 5 local then 1 global, repeating
+        r = cfg.local_global_ratio
+        return np.asarray([0 if (i % (r + 1)) == r else cfg.sliding_window
+                           for i in range(L)], dtype=np.int32)
+    return np.full(L, cfg.sliding_window, dtype=np.int32)
+
+
+def _attend_full(p, h, cfg, env: ShardEnv, window, positions, causal=True,
+                 kv_override=None):
+    """Chunked attention with RoPE. h: (B,S,d). window: traced scalar."""
+    B, S, d = h.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,dk->bsk", h, p["wq"].astype(h.dtype)).reshape(B, S, H, hd)
+    src = h if kv_override is None else kv_override
+    Sk = src.shape[1]
+    k = jnp.einsum("bsd,dk->bsk", src, p["wk"].astype(h.dtype)).reshape(B, Sk, KV, hd)
+    v = jnp.einsum("bsd,dk->bsk", src, p["wv"].astype(h.dtype)).reshape(B, Sk, KV, hd)
+    if kv_override is None:  # self-attention: rotary on q and k
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    q, k, v = env.heads4(q), env.heads4(k), env.heads4(v)
+    o = attn_lib.chunked_attention(q, k, v, causal=causal and kv_override is None,
+                                   window=window)
+    o = jnp.einsum("bsk,kd->bsd", o.reshape(B, S, H * hd),
+                   p["wo"].astype(h.dtype))
+    return env.act3(o), (k, v)
+
+
+def _ffn_apply(p, h, cfg, env: ShardEnv, mode: str):
+    if cfg.is_moe:
+        y = moe_ffn(h, p, MoEDims(cfg.n_experts, cfg.moe_top_k,
+                                  cfg.capacity_factor),
+                    env.mesh, model_axis=env.model_axis,
+                    data_axes=env.data_axes, mode=mode)
+        if cfg.n_shared_experts:
+            y = y + swiglu(h, p["shared"]["w_gate"].astype(h.dtype),
+                           p["shared"]["w_up"].astype(h.dtype),
+                           p["shared"]["w_down"].astype(h.dtype))
+        return y
+    return swiglu(h, p["w_gate"].astype(h.dtype), p["w_up"].astype(h.dtype),
+                  p["w_down"].astype(h.dtype))
+
+
+def _block_forward(p, h, cfg, env, window, positions, mode, state=None,
+                   enc_out=None, causal=True):
+    """One transformer block (train/prefill path). Returns (h, new_state)."""
+    new_state = {}
+    if cfg.family == "ssm":
+        tm_state = None if state is None else (state["shift_tm"], state["wkv"])
+        y, (new_shift, new_wkv) = rwkv_time_mix(
+            p, rms_norm(h, p["ln1"], cfg.norm_eps), tm_state,
+            cfg.rwkv_head_size)
+        h = h + y
+        cm_state = None if state is None else state["shift_cm"]
+        y, new_cm = rwkv_channel_mix(p, rms_norm(h, p["ln2"], cfg.norm_eps),
+                                     cm_state)
+        h = env.act3(h + y)
+        return h, {"wkv": new_wkv, "shift_tm": new_shift, "shift_cm": new_cm}
+
+    hn = rms_norm(h, p["ln1"], cfg.norm_eps)
+    ao, (k, v) = _attend_full(p["attn"], hn, cfg, env, window, positions,
+                              causal=causal)
+    if cfg.family == "hybrid":
+        m_state = None if state is None else (state["ssm"], state["conv"])
+        mo, (new_ssm, new_conv) = mamba_forward(p["mamba"], hn, m_state)
+        beta = jax.nn.sigmoid(p["beta"].astype(jnp.float32))
+        ao = (beta[0] * ao.astype(jnp.float32)
+              + beta[1] * mo.astype(jnp.float32)).astype(h.dtype)
+        new_state.update(ssm=new_ssm, conv=new_conv)
+    h = h + ao
+    if enc_out is not None:  # whisper decoder cross-attention
+        hc = rms_norm(h, p["ln_cross"], cfg.norm_eps)
+        co, (ck, cv) = _attend_full(p["cross"], hc, cfg, env, 0, positions,
+                                    kv_override=enc_out)
+        h = h + co
+        new_state.update(ck=ck, cv=cv)
+    hn2 = rms_norm(h, p["ln2"], cfg.norm_eps)
+    h = env.act3(h + _ffn_apply(p["ffn"] if "ffn" in p else p, hn2, cfg, env,
+                                mode))
+    if cfg.family == "hybrid" and cfg.sliding_window:
+        W = min(cfg.sliding_window, k.shape[1])
+        k, v = k[:, -W:], v[:, -W:]
+    new_state.update(k=k, v=v)
+    return h, new_state
+
+
+# ---------------------------------------------------------------------------
+# full-model passes
+# ---------------------------------------------------------------------------
+
+def _stack_forward(params, cfg, env, h, positions, mode, enc_out=None,
+                   layers_key="layers", remat=True, causal=True):
+    """Scan the layer stack; returns (h, per-layer states stacked)."""
+    windows = jnp.asarray(_layer_windows(cfg)) if layers_key == "layers" \
+        else jnp.zeros(cfg.n_enc_layers, jnp.int32)
+
+    def body(h, xs):
+        lp, w = xs
+        h, st = _block_forward(lp, h, cfg, env, w, positions, mode,
+                               enc_out=enc_out, causal=causal)
+        return h, st
+
+    fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) \
+        if remat else body
+    h, states = jax.lax.scan(fn, h, (params[layers_key], windows),
+                             unroll=settings.scan_unroll())
+    return h, states
+
+
+def forward_loss(params, batch, cfg: ArchConfig, env: ShardEnv):
+    """Training loss for every family (mode=train, full teacher forcing)."""
+    if cfg.family == "audio":
+        return _whisper_loss(params, batch, cfg, env)
+    if "embeds" in batch:
+        h = env.act3(batch["embeds"].astype(CDT))
+    else:
+        h = env.act3(embed_lookup(params["embed"], batch["tokens"]))
+    S = h.shape[1]
+    positions = jnp.arange(S)[None, :]
+    h, _ = _stack_forward(params, cfg, env, h, positions, "train")
+    h = env.dp3(h)  # gather the seq-sharded stream once for the LM head
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = unembed_logits(h, params["unembed"], cfg.vocab_size)
+    logits = env.logits3(logits)
+    return softmax_xent(logits, batch["labels"])
+
+
+def _whisper_encode(params, frames, cfg, env):
+    h = env.dp3(frames.astype(CDT))
+    positions = jnp.arange(h.shape[1])[None, :]
+    h, _ = _stack_forward(params, cfg, env, h, positions, "train",
+                          layers_key="enc_layers", causal=False)
+    return rms_norm(h, params["enc_final_norm"], cfg.norm_eps)
+
+
+def _whisper_loss(params, batch, cfg, env):
+    enc = _whisper_encode(params, batch["frames"], cfg, env)
+    h = env.dp3(embed_lookup(params["embed"], batch["tokens"]))
+    positions = jnp.arange(h.shape[1])[None, :]
+    h, _ = _stack_forward(params, cfg, env, h, positions, "train",
+                          enc_out=enc)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = unembed_logits(h, params["unembed"], cfg.vocab_size)
+    logits = env.logits3(logits)
+    return softmax_xent(logits, batch["labels"])
+
+
+def prefill(params, batch, cfg: ArchConfig, env: ShardEnv):
+    """Prefill pass: returns (last-position logits, populated cache)."""
+    if cfg.family == "audio":
+        enc = _whisper_encode(params, batch["frames"], cfg, env)
+        h = env.dp3(embed_lookup(params["embed"], batch["tokens"]))
+        positions = jnp.arange(h.shape[1])[None, :]
+        h, states = _stack_forward(params, cfg, env, h, positions, "prefill",
+                                   enc_out=enc)
+        S_dec = h.shape[1]
+        cache = {"k": _pad_to(states["k"], cfg.max_decode_len, axis=2),
+                 "v": _pad_to(states["v"], cfg.max_decode_len, axis=2),
+                 "ck": states["ck"], "cv": states["cv"],
+                 "pos": jnp.asarray(S_dec, jnp.int32)}
+    else:
+        if "embeds" in batch:
+            h = env.dp3(batch["embeds"].astype(CDT))
+        else:
+            h = env.dp3(embed_lookup(params["embed"], batch["tokens"]))
+        S = h.shape[1]
+        positions = jnp.arange(S)[None, :]
+        h, states = _stack_forward(params, cfg, env, h, positions, "prefill")
+        cache = {"pos": jnp.asarray(S, jnp.int32)}
+        if cfg.family == "ssm":
+            cache.update(wkv=states["wkv"], shift_tm=states["shift_tm"],
+                         shift_cm=states["shift_cm"])
+        elif cfg.family == "hybrid":
+            cache.update(k=states["k"], v=states["v"],
+                         ssm=states["ssm"], conv=states["conv"])
+        else:
+            cache.update(k=states["k"], v=states["v"])
+    h = rms_norm(h[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = unembed_logits(h, params["unembed"], cfg.vocab_size)
+    return logits, cache
+
+
+def _pad_to(x, size, axis):
+    pad = size - x.shape[axis]
+    if pad <= 0:
+        return x[(slice(None),) * axis + (slice(0, size),)]
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def decode_step(params, cache, batch, cfg: ArchConfig, env: ShardEnv):
+    """One-token decode against a populated cache. Returns (logits, cache)."""
+    pos = cache["pos"]
+    if "embeds" in batch:
+        h = env.dp3(batch["embeds"].astype(CDT))
+    else:
+        h = env.dp3(embed_lookup(params["embed"], batch["tokens"]))
+    windows = jnp.asarray(_layer_windows(cfg))
+
+    def body(h, xs):
+        lp, w, layer_cache = xs
+        h, new_cache = _decode_block(lp, h, cfg, env, w, pos, layer_cache)
+        return h, new_cache
+
+    layer_caches = {k: v for k, v in cache.items() if k != "pos"}
+    h, new_caches = jax.lax.scan(
+        body, h, (params["layers"], windows, layer_caches),
+        unroll=settings.scan_unroll())
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = unembed_logits(h, params["unembed"], cfg.vocab_size)
+    logits = env.logits3(logits)
+    return logits, {**new_caches, "pos": pos + 1}
+
+
+def _decode_block(p, h, cfg, env, window, pos, cache):
+    """Single-token block forward with cache update."""
+    new_cache = dict(cache)
+    if cfg.family == "ssm":
+        y, (ns, nw) = rwkv_time_mix(p, rms_norm(h, p["ln1"], cfg.norm_eps),
+                                    (cache["shift_tm"], cache["wkv"]),
+                                    cfg.rwkv_head_size)
+        h = h + y
+        y, nc = rwkv_channel_mix(p, rms_norm(h, p["ln2"], cfg.norm_eps),
+                                 cache["shift_cm"])
+        return h + y, {"wkv": nw, "shift_tm": ns, "shift_cm": nc}
+
+    hn = rms_norm(h, p["ln1"], cfg.norm_eps)
+    B, _, d = hn.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,dk->bsk", hn, p["attn"]["wq"].astype(hn.dtype)
+                   ).reshape(B, 1, H, hd)
+    k = jnp.einsum("bsd,dk->bsk", hn, p["attn"]["wk"].astype(hn.dtype)
+                   ).reshape(B, 1, KV, hd)
+    v = jnp.einsum("bsd,dk->bsk", hn, p["attn"]["wv"].astype(hn.dtype)
+                   ).reshape(B, 1, KV, hd)
+    posv = jnp.full((1, 1), pos, jnp.int32)
+    q = rope(q, posv, cfg.rope_theta)
+    k = rope(k, posv, cfg.rope_theta)
+    S_cache = cache["k"].shape[1]
+    ring = cfg.family == "hybrid"  # ring buffer of window size
+    slot = pos % S_cache if ring else jnp.minimum(pos, S_cache - 1)
+    kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+    cache_len = jnp.minimum(pos + 1, S_cache)
+    ao = attn_lib.decode_attention(q, kc, vc, cache_len,
+                                   window=0 if ring else window)
+    ao = jnp.einsum("bsk,kd->bsd", ao.reshape(B, 1, H * hd),
+                    p["attn"]["wo"].astype(hn.dtype))
+    new_cache["k"], new_cache["v"] = kc, vc
+    if cfg.family == "hybrid":
+        mo, (nssm, nconv) = mamba_forward(
+            p["mamba"], hn, (cache["ssm"], cache["conv"]))
+        beta = jax.nn.sigmoid(p["beta"].astype(jnp.float32))
+        ao = (beta[0] * ao.astype(jnp.float32)
+              + beta[1] * mo.astype(jnp.float32)).astype(h.dtype)
+        new_cache["ssm"], new_cache["conv"] = nssm, nconv
+    h = h + ao
+    if "cross" in p:  # whisper: cross-attend to cached encoder K/V
+        hc = rms_norm(h, p["ln_cross"], cfg.norm_eps)
+        qc = jnp.einsum("bsd,dk->bsk", hc, p["cross"]["wq"].astype(hc.dtype)
+                        ).reshape(B, 1, H, hd)
+        S_enc = cache["ck"].shape[1]
+        co = attn_lib.decode_attention(qc, cache["ck"], cache["cv"],
+                                       jnp.asarray(S_enc, jnp.int32))
+        co = jnp.einsum("bsk,kd->bsd", co.reshape(B, 1, H * hd),
+                        p["cross"]["wo"].astype(hc.dtype))
+        h = h + co
+    hn2 = rms_norm(h, p["ln2"], cfg.norm_eps)
+    h = h + _ffn_apply(p["ffn"], hn2, cfg, env, "decode")
+    return h, new_cache
+
+
+def encode(params, batch, cfg: ArchConfig, env: ShardEnv) -> jax.Array:
+    """Sequence embedding: final-norm hidden state at the last position,
+    unit-normalized — the representation the FNS retrieval layer indexes
+    (DESIGN.md §4: the paper's technique applies at this interface for all
+    ten architectures)."""
+    if "embeds" in batch:
+        h = env.dp3(batch["embeds"].astype(CDT))
+    else:
+        h = env.dp3(embed_lookup(params["embed"], batch["tokens"]))
+    S = h.shape[1]
+    positions = jnp.arange(S)[None, :]
+    h, _ = _stack_forward(params, cfg, env, h, positions, "prefill",
+                          remat=False)
+    h = rms_norm(h[:, -1], params["final_norm"], cfg.norm_eps)
+    hf = h.astype(jnp.float32)
+    return hf / jnp.maximum(jnp.linalg.norm(hf, axis=-1, keepdims=True), 1e-9)

@@ -1,0 +1,35 @@
+"""Batched serving driver: prefill + greedy/temperature decode loop."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import ShardEnv, decode_step, prefill
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, env: ShardEnv, params):
+        self.cfg, self.env, self.params = cfg, env, params
+        self._prefill = jax.jit(
+            lambda p, b: prefill(p, b, cfg, env))
+        self._decode = jax.jit(
+            lambda p, c, b: decode_step(p, c, b, cfg, env))
+
+    def generate(self, tokens, max_new: int = 32, temperature: float = 0.0,
+                 key=None):
+        """tokens: (B, S) int32 prompt. Returns (B, max_new) generated ids."""
+        logits, cache = self._prefill(self.params, {"tokens": tokens})
+        out = []
+        for i in range(max_new):
+            if temperature > 0.0:
+                key, sub = jax.random.split(key)
+                nxt = jax.random.categorical(
+                    sub, logits[:, -1] / temperature, axis=-1)
+            else:
+                nxt = jnp.argmax(logits[:, -1], axis=-1)
+            nxt = nxt.astype(jnp.int32)[:, None]
+            out.append(nxt)
+            logits, cache = self._decode(self.params, cache,
+                                         {"tokens": nxt})
+        return jnp.concatenate(out, axis=1)

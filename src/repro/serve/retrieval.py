@@ -1,0 +1,60 @@
+"""RAG bridge: model embeddings -> fiber-navigable filtered retrieval.
+
+This is where the paper's technique is a first-class serving feature for
+every assigned architecture (DESIGN.md §4): an LM encodes queries/documents
+into unit vectors; the FNS index (α-kNN graph + anchor atlas) answers
+metadata-filtered nearest-neighbour requests with drift-guided search.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.atlas import AnchorAtlas
+from repro.core.graph import build_alpha_knn
+from repro.core.search import FiberIndex, SearchParams, search
+from repro.core.types import Dataset, FilterPredicate, normalize
+from repro.models.transformer import ShardEnv, encode
+
+
+@dataclasses.dataclass
+class RetrievalService:
+    index: FiberIndex
+    params: SearchParams
+
+    @staticmethod
+    def build(ds: Dataset, *, graph_k: int = 32, r_max: int = 96,
+              alpha: float = 1.2, n_clusters: int | None = None,
+              params: SearchParams = SearchParams()) -> "RetrievalService":
+        graph = build_alpha_knn(ds.vectors, k=graph_k, r_max=r_max,
+                                alpha=alpha)
+        atlas = AnchorAtlas.build(ds, n_clusters=n_clusters)
+        return RetrievalService(
+            FiberIndex(ds.vectors, ds.metadata, graph, atlas), params)
+
+    def query(self, vector: np.ndarray, predicate: FilterPredicate,
+              seed: int = 0):
+        ids, sims, stats = search(self.index, normalize(vector), predicate,
+                                  self.params, seed=seed)
+        return ids, sims, stats
+
+
+class EncodedRetriever:
+    """LM encoder + RetrievalService: the end-to-end RAG serving path."""
+
+    def __init__(self, cfg: ArchConfig, env: ShardEnv, params,
+                 service: RetrievalService):
+        self.cfg, self.env, self.params = cfg, env, params
+        self.service = service
+        self._encode = jax.jit(lambda p, b: encode(p, b, cfg, env))
+
+    def embed_tokens(self, tokens) -> np.ndarray:
+        return np.asarray(self._encode(self.params, {"tokens": tokens}))
+
+    def retrieve(self, tokens, predicate: FilterPredicate, seed: int = 0):
+        vecs = self.embed_tokens(tokens)
+        return [self.service.query(v, predicate, seed=seed + i)
+                for i, v in enumerate(vecs)]

@@ -1,0 +1,108 @@
+"""Fault-tolerant training loop.
+
+Production behaviors implemented and tested:
+* checkpoint/restart: periodic atomic checkpoints; on start, resume from the
+  latest complete one; the step-indexed data pipeline makes resume exact;
+* preemption handling: SIGTERM/SIGINT set a flag, the loop checkpoints at
+  the next step boundary and exits cleanly (cluster eviction pattern);
+* straggler detection: rolling step-time watermarks; steps slower than
+  ``straggler_factor`` x p50 are logged with their step index — on a real
+  fleet this feeds the replacement policy; here it exercises the plumbing;
+* async checkpoint writes off the critical path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.checkpoint import ckpt as ckpt_lib
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int = 100
+    ckpt_every: int = 25
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep: int = 3
+    async_ckpt: bool = True
+    straggler_factor: float = 3.0
+    log_every: int = 10
+
+
+class TrainLoop:
+    def __init__(self, cfg: LoopConfig, train_step: Callable, pipeline,
+                 params, opt_state, put_batch: Callable | None = None):
+        self.cfg = cfg
+        self.train_step = train_step
+        self.pipeline = pipeline
+        self.params = params
+        self.opt_state = opt_state
+        self.put_batch = put_batch or (lambda b: b)
+        self.metrics_log: list[dict] = []
+        self.step_times: list[float] = []
+        self.stragglers: list[int] = []
+        self._preempted = False
+        self._ckpt_thread = None
+
+    # -- preemption -----------------------------------------------------------
+    def _handle_preempt(self, signum, frame):  # noqa: ARG002
+        self._preempted = True
+
+    def install_signal_handlers(self):
+        signal.signal(signal.SIGTERM, self._handle_preempt)
+        signal.signal(signal.SIGUSR1, self._handle_preempt)
+
+    # -- checkpoint -----------------------------------------------------------
+    def _save(self, step: int):
+        if self._ckpt_thread is not None:
+            self._ckpt_thread.join()  # one in flight at a time
+        tree = {"params": self.params, "opt": self.opt_state}
+        self._ckpt_thread = ckpt_lib.save(
+            self.cfg.ckpt_dir, step, tree,
+            asynchronous=self.cfg.async_ckpt, keep=self.cfg.keep)
+
+    def try_resume(self, shardings=None) -> int:
+        latest = ckpt_lib.latest_step(self.cfg.ckpt_dir)
+        if latest is None:
+            return 0
+        like = {"params": self.params, "opt": self.opt_state}
+        tree, step = ckpt_lib.restore(self.cfg.ckpt_dir, latest, like,
+                                      shardings)
+        self.params, self.opt_state = tree["params"], tree["opt"]
+        return step
+
+    # -- main loop ------------------------------------------------------------
+    def run(self, start_step: int = 0) -> dict:
+        preempt_saved = False
+        step = start_step
+        for step in range(start_step, self.cfg.total_steps):
+            t0 = time.time()
+            batch = self.put_batch(self.pipeline.get_batch(step))
+            self.params, self.opt_state, metrics = self.train_step(
+                self.params, self.opt_state, batch)
+            loss = float(metrics["loss"])  # blocks: keeps timing honest
+            dt = time.time() - t0
+            self.step_times.append(dt)
+            if len(self.step_times) >= 8:
+                p50 = float(np.median(self.step_times[-64:]))
+                if dt > self.cfg.straggler_factor * p50:
+                    self.stragglers.append(step)
+            if step % self.cfg.log_every == 0:
+                self.metrics_log.append(
+                    {"step": step, "loss": loss, "dt": dt,
+                     "grad_norm": float(metrics["grad_norm"])})
+            if (step + 1) % self.cfg.ckpt_every == 0:
+                self._save(step + 1)
+            if self._preempted:
+                self._save(step + 1)
+                preempt_saved = True
+                break
+        if self._ckpt_thread is not None:
+            self._ckpt_thread.join()
+        return {"last_step": step + 1, "preempted": preempt_saved,
+                "stragglers": self.stragglers, "metrics": self.metrics_log}

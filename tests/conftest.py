@@ -1,0 +1,40 @@
+"""Shared fixtures: one small synthetic corpus + index per session.
+
+NOTE: no XLA_FLAGS here — tests run on the single real CPU device; only the
+dry-run sets the 512-device placeholder count (see launch/dryrun.py).
+"""
+import numpy as np
+import pytest
+
+from repro.core import AnchorAtlas, FiberIndex, build_alpha_knn
+from repro.data.ground_truth import attach_ground_truth
+from repro.data.synth import SynthSpec, make_dataset, make_queries
+
+
+@pytest.fixture(scope="session")
+def small_ds():
+    return make_dataset(SynthSpec(n=3000, d=64, n_components=24,
+                                  n_fields=10, seed=0))
+
+
+@pytest.fixture(scope="session")
+def small_queries(small_ds):
+    qs = make_queries(small_ds, n_queries=40, seed=1)
+    attach_ground_truth(small_ds, qs, k=10)
+    return qs
+
+
+@pytest.fixture(scope="session")
+def small_graph(small_ds):
+    return build_alpha_knn(small_ds.vectors, k=24, r_max=64, alpha=1.2)
+
+
+@pytest.fixture(scope="session")
+def small_atlas(small_ds):
+    return AnchorAtlas.build(small_ds, seed=0)
+
+
+@pytest.fixture(scope="session")
+def small_index(small_ds, small_graph, small_atlas):
+    return FiberIndex(small_ds.vectors, small_ds.metadata, small_graph,
+                      small_atlas)

@@ -1,0 +1,49 @@
+"""Accounting machinery: extrapolation math + recurrent corrections +
+reduced-depth config construction (the compile-heavy path is exercised by
+the dry-run itself)."""
+import numpy as np
+
+from repro.configs import SHAPES, get_config
+from repro.launch.accounting import (_pattern_len,
+                                     _recurrent_correction_flops,
+                                     reduced_depth)
+
+
+def test_pattern_lengths():
+    assert _pattern_len(get_config("llama3.2-1b")) == 1
+    assert _pattern_len(get_config("gemma3-1b")) == 6   # 5 local + 1 global
+
+
+def test_reduced_depth_preserves_widths():
+    cfg = get_config("kimi-k2-1t-a32b")
+    r = reduced_depth(cfg, 2)
+    assert r.n_layers == 2
+    assert (r.d_model, r.n_experts, r.d_ff) == (cfg.d_model, cfg.n_experts,
+                                                cfg.d_ff)
+
+
+def test_reduced_depth_encdec():
+    cfg = get_config("whisper-small")
+    r = reduced_depth(cfg, 2)
+    assert r.n_layers == 2 and r.n_enc_layers == 2
+
+
+def test_recurrent_corrections():
+    spec = SHAPES["train_4k"]
+    hymba = _recurrent_correction_flops(get_config("hymba-1.5b"), "train_4k")
+    rwkv = _recurrent_correction_flops(get_config("rwkv6-3b"), "train_4k")
+    dense = _recurrent_correction_flops(get_config("llama3.2-1b"), "train_4k")
+    assert dense == 0.0
+    tokens = spec.global_batch * spec.seq_len
+    # hymba: 4x * 9 * tokens * d_in * N * L
+    assert np.isclose(hymba, 4 * 9 * tokens * 3200 * 16 * 32)
+    assert rwkv > 0
+
+
+def test_linear_extrapolation_math():
+    # fixed + L*per_layer recovered exactly from two depths
+    fixed, per_layer, l1, l2, L = 7.0, 3.0, 1, 2, 61
+    c1, c2 = fixed + l1 * per_layer, fixed + l2 * per_layer
+    pl = (c2 - c1) / (l2 - l1)
+    fx = c1 - l1 * pl
+    assert fx + L * pl == fixed + L * per_layer

@@ -1,0 +1,52 @@
+"""Anchor atlas: Lemma 4.1 storage bound, inverted-index consistency."""
+import numpy as np
+
+from repro.core.atlas import AnchorAtlas
+from repro.core.types import FilterPredicate
+
+
+def test_storage_lemma_4_1(small_ds, small_atlas):
+    members, cidx = small_atlas.storage_entries()
+    populated = int((small_ds.metadata >= 0).sum())
+    assert members == populated            # one entry per populated field
+    assert cidx <= populated               # dedup only shrinks
+
+
+def test_members_partition(small_ds, small_atlas):
+    # every populated (point, field) appears exactly once, in its cluster
+    f = 0
+    col = small_ds.metadata[:, f]
+    for i in range(0, small_ds.n, 217):
+        v = int(col[i])
+        if v < 0:
+            continue
+        c = int(small_atlas.assign[i])
+        assert i in small_atlas.members[c][f][v].tolist()
+
+
+def test_inverted_index_consistency(small_ds, small_atlas):
+    for f in range(small_ds.n_fields):
+        for v, clusters in list(small_atlas.cluster_index[f].items())[:5]:
+            for c in clusters.tolist():
+                assert v in small_atlas.members[c][f]
+                assert small_atlas.members[c][f][v].size > 0
+
+
+def test_matching_clusters_superset(small_ds, small_atlas, small_queries):
+    """C_match must contain every cluster holding a matching point."""
+    for q in small_queries[:10]:
+        mask = q.predicate.mask(small_ds.metadata)
+        true_clusters = set(small_atlas.assign[mask].tolist())
+        cm = set(small_atlas.matching_clusters(q.predicate).tolist())
+        assert true_clusters <= cm
+
+
+def test_select_anchors_returns_matching_seeds(small_ds, small_atlas,
+                                               small_queries):
+    rng = np.random.default_rng(0)
+    for q in small_queries[:10]:
+        seeds, used = small_atlas.select_anchors(q.vector, q.predicate,
+                                                 set(), rng=rng)
+        mask = q.predicate.mask(small_ds.metadata)
+        for s in seeds:
+            assert mask[s], "anchor seed must satisfy the filter"

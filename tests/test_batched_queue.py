@@ -1,0 +1,31 @@
+"""Batched queue primitives (hypothesis): merge keeps smallest, pop shifts."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.batched.engine import INF, _merge_queue, _pop
+
+
+@given(st.lists(st.floats(0, 10), min_size=1, max_size=12),
+       st.lists(st.floats(0, 10), min_size=1, max_size=12),
+       st.integers(1, 8))
+@settings(max_examples=40, deadline=None)
+def test_merge_keeps_smallest(a, b, cap):
+    qa = np.sort(np.asarray(a, np.float32))[:cap]
+    qa = np.pad(qa, (0, cap - len(qa)), constant_values=float(INF))
+    ia = np.arange(cap, dtype=np.int32)
+    nb = np.asarray(b, np.float32)
+    ib = 100 + np.arange(len(b), dtype=np.int32)
+    mv, mi = _merge_queue(jnp.asarray(qa[None]), jnp.asarray(ia[None]),
+                          jnp.asarray(nb[None]), jnp.asarray(ib[None]), cap)
+    got = np.asarray(mv[0])
+    expect = np.sort(np.concatenate([qa, nb]))[:cap]
+    np.testing.assert_allclose(got, expect, rtol=1e-6)
+
+
+def test_pop_shifts():
+    v = jnp.asarray([[1.0, 2.0, 3.0]])
+    i = jnp.asarray([[10, 20, 30]], jnp.int32)
+    xv, xi, nv, ni = _pop(v, i)
+    assert float(xv[0]) == 1.0 and int(xi[0]) == 10
+    assert float(nv[0, 0]) == 2.0 and int(ni[0, -1]) == -1

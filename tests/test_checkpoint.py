@@ -1,0 +1,55 @@
+"""Checkpointing: roundtrip, atomicity, keep-k, async, resume determinism."""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"params": {"w": jnp.asarray(rng.standard_normal((4, 3))),
+                       "layers": {"ln": jnp.asarray(rng.standard_normal(7))}},
+            "opt": {"step": jnp.asarray(5, jnp.int32)}}
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    ckpt.save(str(tmp_path), 10, t)
+    restored, step = ckpt.restore(str(tmp_path), 10, t)
+    assert step == 10
+    np.testing.assert_allclose(np.asarray(restored["params"]["w"]),
+                               np.asarray(t["params"]["w"]))
+
+
+def test_atomicity_tmp_ignored(tmp_path):
+    t = _tree()
+    ckpt.save(str(tmp_path), 1, t)
+    os.makedirs(tmp_path / "step_00000002.tmp")  # simulated torn write
+    assert ckpt.latest_step(str(tmp_path)) == 1
+
+
+def test_keep_last_k(tmp_path):
+    t = _tree()
+    for s in range(6):
+        ckpt.save(str(tmp_path), s, t, keep=2)
+    assert ckpt.all_steps(str(tmp_path)) == [4, 5]
+
+
+def test_async_save(tmp_path):
+    t = _tree()
+    th = ckpt.save(str(tmp_path), 3, t, asynchronous=True)
+    th.join()
+    assert ckpt.latest_step(str(tmp_path)) == 3
+
+
+def test_shape_mismatch_raises(tmp_path):
+    t = _tree()
+    ckpt.save(str(tmp_path), 1, t)
+    bad = {"params": {"w": jnp.zeros((2, 2)),
+                      "layers": {"ln": jnp.zeros(7)}},
+           "opt": {"step": jnp.asarray(0, jnp.int32)}}
+    with pytest.raises(ValueError, match="shape mismatch"):
+        ckpt.restore(str(tmp_path), 1, bad)

@@ -1,0 +1,36 @@
+"""Data pipelines: determinism, synth structure."""
+import numpy as np
+
+from repro.data.synth import SynthSpec, make_dataset, make_queries
+from repro.data.tokens import TokenPipeline
+
+
+def test_token_pipeline_deterministic():
+    a = TokenPipeline(vocab_size=100, batch=2, seq_len=16, seed=7)
+    b = TokenPipeline(vocab_size=100, batch=2, seq_len=16, seed=7)
+    for s in (0, 5, 99):
+        ba, bb = a.get_batch(s), b.get_batch(s)
+        np.testing.assert_array_equal(ba["tokens"], bb["tokens"])
+    assert not np.array_equal(a.get_batch(0)["tokens"],
+                              a.get_batch(1)["tokens"])
+
+
+def test_labels_are_next_tokens():
+    p = TokenPipeline(vocab_size=50, batch=2, seq_len=8, seed=0)
+    b = p.get_batch(0)
+    assert b["tokens"].shape == b["labels"].shape
+
+
+def test_synth_dataset_structure(small_ds):
+    norms = np.linalg.norm(small_ds.vectors, axis=1)
+    np.testing.assert_allclose(norms, 1.0, rtol=1e-4)
+    assert small_ds.metadata.min() >= -1
+    for f in range(small_ds.n_fields):
+        col = small_ds.metadata[:, f]
+        assert col[col >= 0].max() < small_ds.vocab_sizes[f]
+
+
+def test_query_selectivity_spread(small_queries):
+    sels = np.asarray([q.selectivity for q in small_queries])
+    assert sels.min() < 0.02 and sels.max() > 0.1   # spans paper's range
+    assert all(q.gt_ids.size > 0 for q in small_queries)

@@ -1,0 +1,54 @@
+"""α-kNN graph construction invariants (paper Algorithm 1)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import brute_knn, build_alpha_knn, graph_stats
+from repro.core.types import normalize
+
+
+def _rand_vecs(n, d, seed):
+    rng = np.random.default_rng(seed)
+    return normalize(rng.standard_normal((n, d)))
+
+
+@given(st.integers(30, 120), st.integers(4, 16), st.integers(0, 5))
+@settings(max_examples=12, deadline=None)
+def test_alpha_knn_invariants(n, k, seed):
+    k = min(k, n - 1)
+    vecs = _rand_vecs(n, 16, seed)
+    r_max = 2 * k
+    g = build_alpha_knn(vecs, k=k, r_max=r_max, alpha=1.2)
+    # degree cap applies to every node; kNN edges survive for uncapped nodes
+    assert int(g.degrees.max()) <= max(r_max, k)
+    assert int(g.degrees.min()) >= 1
+    # no self loops, no out-of-range ids, no duplicate neighbors
+    for i in range(n):
+        nb = g.neighbor_list(i)
+        assert (nb != i).all()
+        assert ((nb >= 0) & (nb < n)).all()
+        assert len(set(nb.tolist())) == nb.size
+
+
+def test_symmetry_before_prune():
+    vecs = _rand_vecs(100, 16, 0)
+    g = build_alpha_knn(vecs, k=8, r_max=1000, alpha=1.2)  # no pruning
+    adj = {i: set(g.neighbor_list(i).tolist()) for i in range(100)}
+    for i in range(100):
+        for j in adj[i]:
+            assert i in adj[j], "symmetrization violated"
+
+
+def test_knn_exact():
+    vecs = _rand_vecs(50, 8, 1)
+    idx = brute_knn(vecs, k=5)
+    sims = vecs @ vecs.T
+    np.fill_diagonal(sims, -np.inf)
+    for i in range(50):
+        expect = set(np.argsort(-sims[i])[:5].tolist())
+        assert set(idx[i].tolist()) == expect
+
+
+def test_alpha_prune_caps_hubs(small_ds, small_graph):
+    stats = graph_stats(small_graph)
+    assert stats["max_degree"] <= 64
+    assert stats["min_degree"] >= 1

@@ -1,0 +1,53 @@
+"""Hierarchical atlas (paper §4.3): structure invariants + recall parity
+with the flat atlas (the empirical validation the paper defers)."""
+import numpy as np
+
+from repro.core.hier_atlas import HierAtlas
+from repro.core.search import FiberIndex, SearchParams, run_queries
+from repro.data.ground_truth import recall_at_k
+
+
+def test_structure(small_ds, small_atlas):
+    h = HierAtlas.build(small_ds, small_atlas)
+    k1 = h.super_centroids.shape[0]
+    assert k1 < small_atlas.n_clusters
+    # supers partition the clusters
+    all_members = np.concatenate(h.members_of_super)
+    assert sorted(all_members.tolist()) == list(range(small_atlas.n_clusters))
+
+
+def test_super_index_superset(small_ds, small_atlas, small_queries):
+    """Matching supers must cover every super holding a matching point."""
+    h = HierAtlas.build(small_ds, small_atlas)
+    for q in small_queries[:10]:
+        mask = q.predicate.mask(small_ds.metadata)
+        clusters = np.unique(small_atlas.assign[mask])
+        true_supers = set(h.super_assign[clusters].tolist())
+        got = set(h.matching_supers(q.predicate).tolist())
+        assert true_supers <= got
+
+
+def test_seeds_match_filter(small_ds, small_atlas, small_queries):
+    h = HierAtlas.build(small_ds, small_atlas)
+    for q in small_queries[:10]:
+        seeds, _ = h.select_anchors(q.vector, q.predicate, set(),
+                                    vectors=small_ds.vectors)
+        mask = q.predicate.mask(small_ds.metadata)
+        assert all(mask[s] for s in seeds)
+
+
+def test_recall_parity_with_flat(small_ds, small_graph, small_atlas,
+                                 small_queries):
+    h = HierAtlas.build(small_ds, small_atlas)
+    params = SearchParams(k=10, walk="guided", beam_width=2)
+    idx_flat = FiberIndex(small_ds.vectors, small_ds.metadata, small_graph,
+                          small_atlas)
+    idx_hier = FiberIndex(small_ds.vectors, small_ds.metadata, small_graph,
+                          h)
+    ids_f, _ = run_queries(idx_flat, small_queries, params)
+    ids_h, _ = run_queries(idx_hier, small_queries, params)
+    rf = np.mean([recall_at_k(i, q.gt_ids)
+                  for i, q in zip(ids_f, small_queries)])
+    rh = np.mean([recall_at_k(i, q.gt_ids)
+                  for i, q in zip(ids_h, small_queries)])
+    assert rh > rf - 0.08, (rh, rf)

@@ -1,0 +1,50 @@
+"""HNSW baseline: build sanity + unfiltered recall + filter strategies."""
+import numpy as np
+import pytest
+
+from repro.core.hnsw import HNSW
+from repro.data.ground_truth import filtered_topk, recall_at_k
+
+
+@pytest.fixture(scope="module")
+def hnsw(small_ds):
+    return HNSW.build(small_ds.vectors[:1500], m=12, ef_construction=60,
+                      seed=0)
+
+
+def test_unfiltered_recall(hnsw, small_ds):
+    vecs = small_ds.vectors[:1500]
+    rng = np.random.default_rng(0)
+    recs = []
+    for _ in range(20):
+        q = vecs[rng.integers(1500)]
+        ids, _ = hnsw.search(q, k=10, ef=80)
+        gt, _ = filtered_topk(vecs, q, np.ones(1500, bool), 10)
+        recs.append(recall_at_k(ids, gt))
+    assert np.mean(recs) > 0.85
+
+
+def test_post_filter_only_matching(hnsw, small_ds, small_queries):
+    meta = small_ds.metadata[:1500]
+    for q in small_queries[:5]:
+        ids = hnsw.search_post_filter(q.vector, q.predicate, meta, k=10)
+        if ids.size:
+            assert q.predicate.mask(meta[ids]).all()
+
+
+def test_traversal_filter_only_matching(hnsw, small_ds, small_queries):
+    meta = small_ds.metadata[:1500]
+    for q in small_queries[:5]:
+        ids = hnsw.search_traversal_filter(q.vector, q.predicate, meta, k=10,
+                                           ef=60)
+        if ids.size:
+            assert q.predicate.mask(meta[ids]).all()
+
+
+def test_base_graph_export(hnsw):
+    g = hnsw.base_graph()
+    assert g.n == 1500
+    assert int(g.degrees.max()) <= 24   # 2*m at level 0
+    for i in range(0, 1500, 333):
+        nb = g.neighbor_list(i)
+        assert (nb != i).all()

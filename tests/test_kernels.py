@@ -1,0 +1,102 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + properties."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.types import FilterPredicate
+from repro.kernels import ops, ref
+
+
+def _mk(n, d, Q, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    corpus = rng.standard_normal((n, d)).astype(dtype)
+    queries = rng.standard_normal((Q, d)).astype(dtype)
+    nw = (n + 31) // 32
+    bitmap = rng.integers(0, 2**32, (Q, nw), dtype=np.uint32)
+    return corpus, queries, bitmap
+
+
+@pytest.mark.parametrize("n,d,Q,k", [
+    (100, 32, 3, 8), (513, 64, 5, 16), (1024, 128, 9, 32), (2000, 256, 2, 25),
+])
+def test_masked_cosine_topk_sweep(n, d, Q, k):
+    corpus, queries, bitmap = _mk(n, d, Q, seed=n)
+    s_k, i_k = ops.masked_cosine_topk(jnp.asarray(queries),
+                                      jnp.asarray(corpus),
+                                      jnp.asarray(bitmap), k=k)
+    s_r, i_r = ref.masked_cosine_topk(jnp.asarray(queries),
+                                      jnp.asarray(corpus),
+                                      jnp.asarray(bitmap), k)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_masked_cosine_topk_dtypes(dtype):
+    corpus, queries, bitmap = _mk(300, 64, 4, seed=7, dtype=dtype)
+    s_k, _ = ops.masked_cosine_topk(jnp.asarray(queries), jnp.asarray(corpus),
+                                    jnp.asarray(bitmap), k=8)
+    s_r, _ = ref.masked_cosine_topk(jnp.asarray(queries), jnp.asarray(corpus),
+                                    jnp.asarray(bitmap), 8)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_masked_cosine_topk_ids_valid():
+    corpus, queries, bitmap = _mk(200, 32, 4, seed=3)
+    s, i = ops.masked_cosine_topk(jnp.asarray(queries), jnp.asarray(corpus),
+                                  jnp.asarray(bitmap), k=16)
+    s, i = np.asarray(s), np.asarray(i)
+    for qi in range(4):
+        for kk in range(16):
+            if i[qi, kk] >= 0:
+                # id's filter bit must be set; sim must match the dot
+                w = bitmap[qi, i[qi, kk] >> 5]
+                assert (w >> (i[qi, kk] & 31)) & 1
+                np.testing.assert_allclose(
+                    s[qi, kk], corpus[i[qi, kk]] @ queries[qi], rtol=1e-4)
+
+
+@pytest.mark.parametrize("n,d,Q,R", [(64, 16, 2, 5), (500, 64, 7, 24),
+                                     (1000, 256, 3, 48)])
+def test_fiber_expand_sweep(n, d, Q, R):
+    corpus, queries, bitmap = _mk(n, d, Q, seed=R)
+    rng = np.random.default_rng(R)
+    ids = rng.integers(-1, n, (Q, R)).astype(np.int32)
+    e_k = ops.fiber_expand(jnp.asarray(queries), jnp.asarray(corpus),
+                           jnp.asarray(ids), jnp.asarray(bitmap))
+    e_r = ref.fiber_expand(jnp.asarray(queries), jnp.asarray(corpus),
+                           jnp.asarray(ids), jnp.asarray(bitmap))
+    np.testing.assert_allclose(np.asarray(e_k), np.asarray(e_r),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(10, 300), st.integers(1, 3), st.integers(0, 100))
+@settings(max_examples=15, deadline=None)
+def test_filter_eval_matches_core_mask(n, n_clauses, seed):
+    rng = np.random.default_rng(seed)
+    F = 6
+    meta = rng.integers(-1, 40, (n, F)).astype(np.int32)
+    clauses = {int(f): rng.integers(0, 40, rng.integers(1, 4)).tolist()
+               for f in rng.choice(F, n_clauses, replace=False)}
+    pred = FilterPredicate.make(clauses)
+    fields, allowed = ops.predicate_tables(pred, F)
+    bm = np.asarray(ops.filter_eval(jnp.asarray(meta), jnp.asarray(fields),
+                                    jnp.asarray(allowed), tn=64))
+    unpacked = np.unpackbits(bm.view(np.uint8), bitorder="little")[:n]
+    np.testing.assert_array_equal(unpacked.astype(bool), pred.mask(meta))
+
+
+def test_filter_eval_vs_ref_oracle():
+    rng = np.random.default_rng(0)
+    meta = rng.integers(-1, 50, (777, 8)).astype(np.int32)
+    fields = np.asarray([2, 5, -1, -1], np.int32)
+    allowed = np.zeros((4, 256), np.uint8)
+    allowed[0, [3, 4, 5]] = 1
+    allowed[1, list(range(25))] = 1
+    out_k = ops.filter_eval(jnp.asarray(meta), jnp.asarray(fields),
+                            jnp.asarray(allowed), tn=128)
+    out_r = ref.filter_eval(jnp.asarray(meta), jnp.asarray(fields),
+                            jnp.asarray(allowed))
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))

@@ -1,0 +1,46 @@
+"""Roofline machinery: HLO collective parsing + term math."""
+import numpy as np
+
+from repro.launch.roofline import (RooflineTerms, model_flops,
+                                   parse_collectives, roofline_terms)
+
+HLO = """
+  %ar = bf16[256,1024]{1,0} all-reduce(%x), replica_groups=[16,16]<=[256], to_apply=%sum
+  %ag = (f32[128,64]{1,0}, f32[128,64]{1,0}) all-gather(%a, %b), replica_groups=[2,8]<=[16]
+  %rs = f32[32,32]{1,0} reduce-scatter(%y), replica_groups={{0,1,2,3}}, dimensions={0}
+  %a2a = bf16[8,128]{1,0} all-to-all(%z), replica_groups=[4,4]<=[16]
+  %cp = u32[64]{0} collective-permute(%w), source_target_pairs={{0,1}}
+  %notacoll = f32[2,2]{1,0} add(%p, %q)
+"""
+
+
+def test_parse_collectives():
+    out = parse_collectives(HLO)
+    c = out["counts"]
+    assert c == {"all-reduce": 1, "all-gather": 1, "reduce-scatter": 1,
+                 "all-to-all": 1, "collective-permute": 1}
+    b = out["by_kind"]
+    ar = 256 * 1024 * 2
+    np.testing.assert_allclose(b["all-reduce"], 2 * ar * 15 / 16)
+    ag = 2 * 128 * 64 * 4
+    np.testing.assert_allclose(b["all-gather"], ag * 7 / 8)
+    rs = 32 * 32 * 4
+    np.testing.assert_allclose(b["reduce-scatter"], rs * 3)
+    np.testing.assert_allclose(b["all-to-all"], 8 * 128 * 2 * 3 / 4)
+    np.testing.assert_allclose(b["collective-permute"], 64 * 4)
+
+
+def test_roofline_terms_dominant():
+    t = roofline_terms(197e12, 100e9, 1e9)
+    assert abs(t.compute_s - 1.0) < 1e-9
+    assert t.dominant == "compute"
+    t2 = roofline_terms(1e9, 819e9 * 2, 1e9)
+    assert t2.dominant == "memory"
+
+
+def test_model_flops_train_vs_decode():
+    from repro.configs import SHAPES, get_config
+    cfg = get_config("llama3.2-1b")
+    f_train = model_flops(cfg, SHAPES["train_4k"])
+    f_dec = model_flops(cfg, SHAPES["decode_32k"])
+    assert f_train > f_dec * 1000

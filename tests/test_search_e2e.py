@@ -1,0 +1,36 @@
+"""End-to-end filtered search: recall, failure rate, restart recovery."""
+import numpy as np
+
+from repro.core.search import SearchParams, run_queries, search
+from repro.data.ground_truth import recall_at_k
+
+
+def test_guided_recall_and_failures(small_index, small_queries):
+    params = SearchParams(k=10, walk="guided", beam_width=2)
+    ids, stats = run_queries(small_index, small_queries, params)
+    recs = [recall_at_k(i, q.gt_ids) for i, q in zip(ids, small_queries)]
+    assert np.mean(recs) > 0.6
+    assert np.mean([r == 0.0 for r in recs]) < 0.05   # near-zero failure
+
+
+def test_beam_recall(small_index, small_queries):
+    params = SearchParams(k=10, walk="beam", beam_width=40)
+    ids, _ = run_queries(small_index, small_queries, params)
+    recs = [recall_at_k(i, q.gt_ids) for i, q in zip(ids, small_queries)]
+    assert np.mean(recs) > 0.6
+
+
+def test_results_sorted_and_filtered(small_index, small_queries):
+    params = SearchParams(k=10)
+    for qi, q in enumerate(small_queries[:8]):
+        ids, sims, _ = search(small_index, q.vector, q.predicate, params,
+                              seed=qi)
+        assert (np.diff(sims) <= 1e-6).all()            # descending
+        passes = q.predicate.mask(small_index.metadata)
+        assert passes[ids].all()
+
+
+def test_restart_budget_respected(small_index, small_queries):
+    params = SearchParams(k=10, jump_budget=2)
+    _, stats = run_queries(small_index, small_queries, params)
+    assert max(s.n_walks for s in stats) <= 3

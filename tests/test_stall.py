@@ -1,0 +1,50 @@
+"""Stall-regime taxonomy (paper §8): classification rules + aggregation."""
+import numpy as np
+
+from repro.core.search import SearchParams, run_queries
+from repro.core.stall import (REGIMES, aggregate_stalls, classify_stall,
+                              regimes_by_selectivity,
+                              termination_by_selectivity)
+from repro.core.types import WalkStats
+from repro.data.ground_truth import recall_at_k
+
+
+def _ws(rho, bm):
+    w = WalkStats()
+    w.stall_node = 1
+    w.stall_rho = rho
+    w.stall_b_minus = bm
+    w.stall_drift = 0.1
+    w.stall_potential = 0.3
+    return w
+
+
+def test_classification_rules():
+    sel = 0.10
+    assert classify_stall(_ws(0.01, 5), sel) == "topological_cut"
+    assert classify_stall(_ws(0.5, 5), sel) == "geometric_fold"
+    assert classify_stall(_ws(0.5, 0), sel) == "genuine_basin"
+    assert classify_stall(WalkStats(), sel) is None   # no stall point
+
+
+def test_threshold_is_half_selectivity():
+    # rho just below sigma/2 -> cut; just above -> fold/basin
+    assert classify_stall(_ws(0.049, 1), 0.1) == "topological_cut"
+    assert classify_stall(_ws(0.051, 1), 0.1) == "geometric_fold"
+
+
+def test_aggregation_tables(small_index, small_queries):
+    params = SearchParams(k=10, walk="guided", beam_width=4)
+    ids, stats = run_queries(small_index, small_queries, params)
+    recalls = [recall_at_k(i, q.gt_ids) for i, q in zip(ids, small_queries)]
+    sels = [q.selectivity for q in small_queries]
+    table6 = aggregate_stalls(stats, sels, recalls)
+    assert set(table6) == set(REGIMES)
+    total = sum(v["count"] for v in table6.values())
+    assert total > 0
+    table4 = regimes_by_selectivity(stats, sels, recalls)
+    for row in table4:
+        mix = row["topological_cut"] + row["geometric_fold"] + row["genuine_basin"]
+        assert abs(mix - 1.0) < 1e-6 or mix == 0.0
+    table5 = termination_by_selectivity(stats, sels)
+    assert len(table5) == 5

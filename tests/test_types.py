@@ -1,0 +1,44 @@
+"""FilterPredicate invariants (hypothesis property tests)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.types import FilterPredicate, normalize
+
+
+@st.composite
+def meta_and_pred(draw):
+    n = draw(st.integers(4, 60))
+    f = draw(st.integers(1, 5))
+    meta = draw(st.lists(
+        st.lists(st.integers(-1, 6), min_size=f, max_size=f),
+        min_size=n, max_size=n))
+    n_clauses = draw(st.integers(1, min(3, f)))
+    fields = draw(st.permutations(range(f)))[:n_clauses]
+    clauses = {fi: draw(st.lists(st.integers(0, 6), min_size=1, max_size=3))
+               for fi in fields}
+    return np.asarray(meta, np.int32), FilterPredicate.make(clauses)
+
+
+@given(meta_and_pred())
+@settings(max_examples=60, deadline=None)
+def test_mask_matches_rowwise(mp):
+    meta, pred = mp
+    mask = pred.mask(meta)
+    for i in range(meta.shape[0]):
+        assert mask[i] == pred.matches_row(meta[i])
+
+
+@given(meta_and_pred())
+@settings(max_examples=30, deadline=None)
+def test_unpopulated_fails(mp):
+    meta, pred = mp
+    meta = meta.copy()
+    f0 = pred.clauses[0][0]
+    meta[:, f0] = -1  # unpopulated field -> no row can satisfy the clause
+    assert not pred.mask(meta).any()
+
+
+def test_normalize_unit():
+    rng = np.random.default_rng(0)
+    v = normalize(rng.standard_normal((17, 9)))
+    np.testing.assert_allclose(np.linalg.norm(v, axis=1), 1.0, rtol=1e-5)

@@ -1,0 +1,60 @@
+"""Walk invariants: results pass filter, sims exact, diagnostics sane."""
+import numpy as np
+
+from repro.core.walk_beam import beam_walk
+from repro.core.walk_common import WalkContext
+from repro.core.walk_guided import guided_walk
+
+
+def _ctx(small_ds, small_graph, q):
+    return WalkContext(small_ds.vectors, small_graph, q.vector,
+                       q.predicate.mask(small_ds.metadata))
+
+
+def _seeds(small_atlas, q, rng):
+    seeds, _ = small_atlas.select_anchors(q.vector, q.predicate, set(),
+                                          rng=rng)
+    return seeds
+
+
+def test_walk_results_pass_filter_and_sims_exact(small_ds, small_graph,
+                                                 small_atlas, small_queries):
+    rng = np.random.default_rng(0)
+    for q in small_queries[:8]:
+        for walk in (beam_walk, guided_walk):
+            ctx = _ctx(small_ds, small_graph, q)
+            seeds = _seeds(small_atlas, q, rng)
+            if not seeds:
+                continue
+            walk(ctx, seeds, k=10)
+            passes = q.predicate.mask(small_ds.metadata)
+            for i, sim in ctx.results.items():
+                assert passes[i]
+                np.testing.assert_allclose(
+                    sim, float(small_ds.vectors[i] @ q.vector), atol=1e-5)
+
+
+def test_guided_walk_stall_diagnostics(small_ds, small_graph, small_atlas,
+                                       small_queries):
+    rng = np.random.default_rng(0)
+    for q in small_queries[:8]:
+        ctx = _ctx(small_ds, small_graph, q)
+        seeds = _seeds(small_atlas, q, rng)
+        if not seeds:
+            continue
+        ws = guided_walk(ctx, seeds, k=10)
+        assert ws.termination in ("converged", "early_stop", "stall_budget",
+                                  "max_hops")
+        if ws.stall_node >= 0:
+            assert 0.0 <= ws.stall_rho <= 1.0
+            assert ws.stall_b_minus >= 0
+            assert np.isfinite(ws.stall_potential)
+
+
+def test_walk_hop_budget(small_ds, small_graph, small_atlas, small_queries):
+    rng = np.random.default_rng(0)
+    q = small_queries[0]
+    ctx = _ctx(small_ds, small_graph, q)
+    seeds = _seeds(small_atlas, q, rng)
+    ws = guided_walk(ctx, seeds, max_hops=7, k=10)
+    assert ws.hops <= 7
