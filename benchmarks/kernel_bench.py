@@ -10,6 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.batched.engine import BatchedEngine, BatchedParams
+from repro.core.device_atlas import pack_predicates
 from repro.core.search import SearchParams, run_queries
 from repro.kernels import ref
 from benchmarks.datasets import K, get_indexes
@@ -47,6 +48,48 @@ def kernel_microbench():
     return out
 
 
+def anchor_select_bench(batch_sizes=(16, 64, 256), reps: int = 5):
+    """Anchor-selection throughput (queries/s): host per-query Python loop
+    over ``AnchorAtlas.select_anchors`` vs one batched device call to
+    ``DeviceAtlas.select_anchors_batch``, at Q in ``batch_sizes``. The
+    device path is reported for both seeding backends ("sort" = one
+    lexicographic lax.sort; "topk" = the masked_cosine_topk route —
+    Pallas on TPU, jnp oracle here)."""
+    ds, qs, idx_alpha, _, _ = get_indexes()
+    atlas = idx_alpha.atlas
+    datlas = atlas.to_device()
+    vectors = jnp.asarray(ds.vectors)
+    out = {}
+    for q_n in batch_sizes:
+        sub = [qs[i % len(qs)] for i in range(q_n)]
+        q_vecs = jnp.asarray(np.stack([q.vector for q in sub]))
+        passes = jnp.asarray(np.stack(
+            [q.predicate.mask(ds.metadata) for q in sub]))
+        ct = tuple(jnp.asarray(x) for x in
+                   pack_predicates([q.predicate for q in sub]))
+        proc = jnp.zeros((q_n, atlas.n_clusters), bool)
+        t0 = time.time()
+        for _ in range(reps):
+            for q in sub:
+                atlas.select_anchors(q.vector, q.predicate, set(),
+                                     n_seeds=10, c_max=5,
+                                     vectors=ds.vectors)
+        out[f"host_q{q_n}"] = q_n * reps / (time.time() - t0)
+        for backend in ("sort", "topk"):
+            fn = jax.jit(lambda qv, pr, ps, b=backend:
+                         datlas.select_anchors_batch(
+                             qv, ct, pr, vectors, ps, n_seeds=10, c_max=5,
+                             backend=b))
+            jax.block_until_ready(fn(q_vecs, proc, passes))  # compile
+            t0 = time.time()
+            for _ in range(reps):
+                res = fn(q_vecs, proc, passes)
+            jax.block_until_ready(res)
+            out[f"device_{backend}_q{q_n}"] = (
+                q_n * reps / (time.time() - t0))
+    return out
+
+
 def engine_bench():
     """Measured QPS: sequential reference vs batched lockstep engine."""
     ds, qs, idx_alpha, _, _ = get_indexes()
@@ -56,7 +99,7 @@ def engine_bench():
                              SearchParams(k=K, walk="guided", beam_width=2))
     t_ref = time.time() - t0
     eng = BatchedEngine(idx_alpha, BatchedParams(k=K, beam_width=4))
-    eng.search(sub[:8])  # compile
+    eng.search(sub)  # compile at the timed batch shape
     t0 = time.time()
     ids_b, _ = eng.search(sub)
     t_b = time.time() - t0

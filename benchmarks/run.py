@@ -16,7 +16,8 @@ def _csv(name: str, us: float, derived: str) -> None:
 
 def main() -> None:
     from benchmarks import tables as T
-    from benchmarks.kernel_bench import engine_bench, kernel_microbench
+    from benchmarks.kernel_bench import (anchor_select_bench, engine_bench,
+                                         kernel_microbench)
 
     results: dict = {}
     t_all = time.time()
@@ -89,6 +90,11 @@ def main() -> None:
     for k, us in results["kernels"].items():
         print(f"{k:28s} {us:10.1f} us/call")
         _csv(f"kernel/{k}", us, "cpu_oracle")
+    results["anchor_select"] = anchor_select_bench()
+    print("\n== Anchor selection: host loop vs device batch (qps) ==")
+    for name, qps in results["anchor_select"].items():
+        print(f"{name:20s} {qps:10.1f} q/s")
+        _csv(f"anchor_select/{name}", 1e6 / qps, f"qps={qps:.0f}")
     results["engine"] = engine_bench()
     e = results["engine"]
     print("\n== Engine: sequential vs batched (CPU measured) ==")

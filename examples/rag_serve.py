@@ -64,3 +64,15 @@ for (ids, sims, stats), qv in zip(out, qvecs):
 print(f"served {args.queries} filtered queries (selectivity {sel:.1%}) "
       f"in {dt*1000:.0f} ms ({dt*1000/args.queries:.1f} ms/q incl. encode)")
 print(f"recall@10 vs exact filtered search: {np.mean(recs):.3f}")
+
+# --- online, batched: all queries share each jitted restart round ----------
+ids_b, _ = retr.retrieve_batch(q_tokens, [pred] * args.queries)  # compile
+t0 = time.time()
+ids_b, stats = retr.retrieve_batch(q_tokens, [pred] * args.queries)
+dt_b = time.time() - t0
+recs_b = [recall_at_k(np.asarray(ids), filtered_topk(
+    vectors, qv, pred.mask(meta), 10)[0]) for ids, qv in zip(ids_b, qvecs)]
+print(f"batched (device-resident atlas): {dt_b*1000:.0f} ms "
+      f"({dt_b*1000/args.queries:.1f} ms/q incl. encode), "
+      f"recall@10 {np.mean(recs_b):.3f}, "
+      f"mean restarts {stats['walks'].mean():.2f}")

@@ -1,9 +1,11 @@
 from repro.core.atlas import AnchorAtlas
+from repro.core.device_atlas import DeviceAtlas, pack_predicates
 from repro.core.graph import Graph, build_alpha_knn, graph_stats
 from repro.core.hnsw import HNSW
 from repro.core.search import FiberIndex, SearchParams, run_queries, search
 from repro.core.types import Dataset, FilterPredicate, Query, SearchStats, WalkStats
 
-__all__ = ["AnchorAtlas", "Graph", "build_alpha_knn", "graph_stats", "HNSW",
-           "FiberIndex", "SearchParams", "run_queries", "search", "Dataset",
+__all__ = ["AnchorAtlas", "DeviceAtlas", "pack_predicates", "Graph",
+           "build_alpha_knn", "graph_stats", "HNSW", "FiberIndex",
+           "SearchParams", "run_queries", "search", "Dataset",
            "FilterPredicate", "Query", "SearchStats", "WalkStats"]

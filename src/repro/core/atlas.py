@@ -137,6 +137,14 @@ class AnchorAtlas:
             seeds.extend(int(p) for p in pts[:take])
         return seeds, used
 
+    # -- device export -------------------------------------------------------
+    def to_device(self, v_cap: int | None = None):
+        """Pack into a DeviceAtlas (flat device arrays; DESIGN.md §3) for
+        batched on-accelerator anchor selection. v_cap=None auto-sizes to
+        the metadata vocabulary."""
+        from repro.core.device_atlas import DeviceAtlas
+        return DeviceAtlas.from_atlas(self, v_cap=v_cap)
+
     # -- storage accounting (Lemma 4.1 validation) ---------------------------
     def storage_entries(self) -> tuple[int, int]:
         m = sum(arr.size for cl in self.members for by_f in cl.values()

@@ -4,8 +4,13 @@ Runs Q queries in lockstep as one ``lax.while_loop``: all walk state is
 fixed-shape (visited masks, V-sorted fixed-capacity frontier/beam queues,
 running top-k results), one iteration expands one node per active query,
 and every distance computation is a batched gather+einsum (the
-``fiber_expand`` Pallas kernel on TPU). Host code drives anchor restarts
-between walk rounds, mirroring Algorithm 2.
+``fiber_expand`` Pallas kernel on TPU).
+
+Anchor restarts are device-resident too: each restart round is ONE jitted
+call (``atlas_round``) that selects anchors for all Q queries from the
+packed ``DeviceAtlas`` and runs the lockstep walk — the host keeps only
+the round loop and the processed-cluster bitmask, mirroring Algorithm 2
+without per-query Python.
 
 Vectorization deltas vs the sequential reference (recorded in DESIGN.md §3
 and validated for recall parity in tests):
@@ -23,8 +28,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.atlas import AnchorAtlas
-from repro.core.graph import Graph
+from repro.core.device_atlas import DeviceAtlas, pack_predicates
 from repro.core.search import FiberIndex, SearchParams
 from repro.core.types import Query
 
@@ -88,11 +92,23 @@ def walk_batch(vectors, adjacency, passes, q_vecs, seeds,
     beam_v = jnp.full((Q, B), INF)
     beam_i = jnp.full((Q, B), -1, jnp.int32)
 
-    seed_pass = jnp.take_along_axis(passes, safe_seeds, axis=1) & seed_valid
-    res_v, res_i = _merge_queue(
-        jnp.full((Q, k), INF) if init_results is None else init_results[0],
-        jnp.full((Q, k), -1, jnp.int32) if init_results is None else init_results[1],
-        jnp.where(seed_pass, seed_v, INF), seeds, k)
+    # cross-round dedup: a node carried in init_results must not re-enter
+    # the result queue when a later restart re-reaches it (its value is a
+    # pure function of (q, node), so dropping the re-merge is exactly the
+    # sequential engine's dict dedup). Traversal is unaffected.
+    if init_results is None:
+        res0_v = jnp.full((Q, k), INF)
+        res0_i = jnp.full((Q, k), -1, jnp.int32)
+        in_res = jnp.zeros((Q, n), bool)
+    else:
+        res0_v, res0_i = init_results
+        in_res = jnp.zeros((Q, n), bool).at[
+            jnp.arange(Q)[:, None], jnp.maximum(res0_i, 0)].max(res0_i >= 0)
+
+    seed_pass = (jnp.take_along_axis(passes, safe_seeds, axis=1) & seed_valid
+                 & ~jnp.take_along_axis(in_res, safe_seeds, axis=1))
+    res_v, res_i = _merge_queue(res0_v, res0_i,
+                                jnp.where(seed_pass, seed_v, INF), seeds, k)
 
     state = dict(
         visited=visited, frontier_v=frontier_v, frontier_i=frontier_i,
@@ -143,8 +159,11 @@ def walk_batch(vectors, adjacency, passes, q_vecs, seeds,
         sims = jnp.einsum("qrd,qd->qr", vectors[sn], q_vecs)
         v_n = 1.0 - sims
         pass_r = jnp.take_along_axis(passes, sn, axis=1) & nvalid
-        # results: merge new filtered
-        cand_v = jnp.where(new & pass_r, v_n, INF)
+        # results: merge new filtered, minus nodes a prior round already
+        # banked (in_res is static within the round: nodes merged this
+        # round are first-seen, so `new` already excludes them)
+        in_res_r = jnp.take_along_axis(in_res, sn, axis=1)
+        cand_v = jnp.where(new & pass_r & ~in_res_r, v_n, INF)
         res_v, res_i = _merge_queue(s["res_v"], s["res_i"], cand_v, nbrs, k)
         # local signals
         n_valid = jnp.maximum(nvalid.sum(1), 1)
@@ -213,54 +232,77 @@ def walk_batch(vectors, adjacency, passes, q_vecs, seeds,
                 visited=out["visited"])
 
 
-class BatchedEngine:
-    """Host-driven restart loop around the jit'd lockstep walk."""
+def atlas_round(datlas: DeviceAtlas, vectors, adjacency, passes, q_vecs,
+                fields, allowed, processed, need, res_v, res_i,
+                p: BatchedParams, seed_backend: str):
+    """One full restart round for all Q queries on device: batched anchor
+    selection from the packed atlas, then the lockstep walk. Queries with
+    ``need`` false see an all-processed atlas and so get no seeds; a query
+    with no seeds converges on its first walk iteration with its results
+    untouched."""
+    gate = processed | ~need[:, None]
+    seeds, used = datlas.select_anchors_batch(
+        q_vecs, (fields, allowed), gate, vectors, passes,
+        n_seeds=p.n_seeds, c_max=p.c_max, backend=seed_backend)
+    out = walk_batch(vectors, adjacency, passes, q_vecs, seeds, p,
+                     init_results=(res_v, res_i))
+    found = (out["res_v"] < INF / 2).sum(axis=1)
+    return dict(res_v=out["res_v"], res_i=out["res_i"],
+                processed=processed | used, need=need & (found < p.k),
+                seeded=seeds[:, 0] >= 0, hops=out["hops"])
 
-    def __init__(self, index: FiberIndex, params: BatchedParams = BatchedParams()):
+
+class BatchedEngine:
+    """Host-driven restart loop around the jit'd select+walk round.
+
+    The host keeps only per-batch constants and the round loop; anchor
+    selection state (the processed-cluster bitmask) and results live on
+    device between rounds.
+    """
+
+    def __init__(self, index: FiberIndex,
+                 params: BatchedParams = BatchedParams(),
+                 seed_backend: str = "topk", v_cap: int | None = None):
         self.index = index
         self.p = params
-        self._walk = jax.jit(functools.partial(walk_batch, p=params))
+        self.datlas = index.atlas.to_device(v_cap=v_cap)
+        self._round = jax.jit(functools.partial(
+            atlas_round, p=params, seed_backend=seed_backend))
         self.vectors = jnp.asarray(index.vectors)
         self.adjacency = jnp.asarray(index.graph.neighbors)
 
     def search(self, queries: list[Query], seed: int = 0):
+        """Filtered top-k for a batch. ``seed`` is kept for API compat; the
+        device path is deterministic (seeds are nearest matching members,
+        never random samples)."""
+        del seed
         p = self.p
         Q = len(queries)
-        rng = np.random.default_rng(seed)
         q_vecs = jnp.asarray(np.stack([q.vector for q in queries]))
         passes = jnp.asarray(np.stack(
             [q.predicate.mask(self.index.metadata) for q in queries]))
-        processed: list[set[int]] = [set() for _ in range(Q)]
-        results = None
+        f_np, a_np = pack_predicates([q.predicate for q in queries],
+                                     v_cap=self.datlas.v_cap)
+        fields, allowed = jnp.asarray(f_np), jnp.asarray(a_np)
+        processed = jnp.zeros((Q, self.datlas.n_clusters), bool)
+        need = jnp.ones(Q, bool)
+        res_v = jnp.full((Q, p.k), INF)
+        res_i = jnp.full((Q, p.k), -1, jnp.int32)
         stats = {"walks": np.zeros(Q, np.int32), "hops": np.zeros(Q, np.int64)}
-        need = np.ones(Q, bool)
         for _ in range(p.jump_budget + 1):
-            seed_arr = np.full((Q, p.n_seeds), -1, np.int32)
-            got = False
-            for qi, q in enumerate(queries):
-                if not need[qi]:
-                    continue
-                s, used = self.index.atlas.select_anchors(
-                    q.vector, q.predicate, processed[qi],
-                    n_seeds=p.n_seeds, c_max=p.c_max, rng=rng,
-                    vectors=self.index.vectors)
-                processed[qi].update(used)
-                if s:
-                    seed_arr[qi, :len(s)] = s
-                    got = True
-            if not got:
+            out = self._round(self.datlas, self.vectors, self.adjacency,
+                              passes, q_vecs, fields, allowed, processed,
+                              need, res_v, res_i)
+            seeded = np.asarray(out["seeded"])
+            if not seeded.any():
                 break
-            out = self._walk(self.vectors, self.adjacency, passes, q_vecs,
-                             jnp.asarray(seed_arr), init_results=results)
-            results = (out["res_v"], out["res_i"])
-            hops = np.asarray(out["hops"])
-            stats["hops"] += hops
-            stats["walks"] += (np.asarray(seed_arr[:, 0]) >= 0) & need
-            found = np.asarray((out["res_v"] < INF / 2).sum(axis=1))
-            need = need & (found < p.k)
-            if not need.any():
+            res_v, res_i = out["res_v"], out["res_i"]
+            processed, need = out["processed"], out["need"]
+            stats["hops"] += np.asarray(out["hops"])
+            stats["walks"] += seeded
+            if not bool(np.asarray(need).any()):
                 break
-        res_v = np.asarray(results[0])
-        res_i = np.asarray(results[1])
+        res_v = np.asarray(res_v)
+        res_i = np.asarray(res_i)
         ids = [res_i[i][res_v[i] < INF / 2] for i in range(Q)]
         return ids, stats

@@ -1,0 +1,271 @@
+"""Device-resident anchor atlas: batched anchor selection as fixed-shape
+JAX ops (paper §4.2–4.3 moved onto the accelerator; DESIGN.md §3).
+
+``AnchorAtlas`` stores members / cluster_index as host dicts-of-dicts, so
+the batched engine used to drop out of JAX every restart round and loop
+over queries in Python. ``DeviceAtlas`` packs the same structure into flat
+device arrays so one jitted call selects anchors for all Q queries:
+
+* ``csr_pts`` (n,) i32 + ``csr_offsets`` (K+1,) i32 — the members lists
+  CSR-flattened: point ids grouped by cluster, ascending id within a
+  cluster. The per-(field, value) sublists of the host atlas are recovered
+  through the query's pass bitmap, so the pack is O(n), not O(n·F).
+* ``presence`` (F, K, W) u32 — the inverted cluster_index transposed into
+  fixed-shape bitmaps: bit v of ``presence[f, k]`` is set iff cluster k
+  holds ≥1 point with metadata[·, f] == v. A conjunctive cluster-match is
+  then a bitwise AND over clauses of OR-reduced words — the host's
+  postings intersection without data-dependent shapes.
+
+``select_anchors_batch`` reproduces ``AnchorAtlas.select_anchors`` exactly
+(same seed sets, same consumed clusters) for every query in the batch; the
+in-cluster nearest-matching-member scan runs either as one lexicographic
+``lax.sort`` over (cluster rank, cosine distance) ["sort" backend] or
+through the ``masked_cosine_topk`` kernel — Pallas on TPU, the jnp oracle
+on CPU — one call per yielding-cluster slot ["topk" backend].
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ops import V_CAP
+
+NEG = jnp.float32(-3.4e38)
+MEMBER_CAP = 4096  # mirrors AnchorAtlas.cluster_members_matching's cap
+
+
+def _n_words(v_cap: int) -> int:
+    return -(-v_cap // 32)
+
+
+def pack_predicates(preds, *, max_clauses: int | None = None,
+                    v_cap: int = V_CAP) -> tuple[np.ndarray, np.ndarray]:
+    """FilterPredicates -> clause tables (fields (Q, C) i32, -1 = inactive;
+    allowed (Q, C, ceil(v_cap/32)) u32 value bitmaps). Values ≥ v_cap are
+    dropped: no point holds them (the atlas inverted index has no posting),
+    so the clause contributes an empty match, same as the host path."""
+    n_cl = max((p.n_clauses for p in preds), default=0)
+    C = max(1, n_cl) if max_clauses is None else max_clauses
+    if n_cl > C:
+        raise ValueError(f"predicate has {n_cl} clauses > max_clauses={C}")
+    Q = len(preds)
+    fields = np.full((Q, C), -1, np.int32)
+    allowed = np.zeros((Q, C, _n_words(v_cap)), np.uint32)
+    for qi, pred in enumerate(preds):
+        for ci, (f, vals) in enumerate(pred.clauses):
+            fields[qi, ci] = f
+            for v in vals:
+                if 0 <= v < v_cap:
+                    allowed[qi, ci, v >> 5] |= np.uint32(1) << np.uint32(v & 31)
+    return fields, allowed
+
+
+def pack_bitmap(mask: jax.Array) -> jax.Array:
+    """(Q, n) bool -> (Q, ceil(n/32)) u32, bit i of word w = point 32w+i."""
+    q, n = mask.shape
+    pad = (-n) % 32
+    m = jnp.pad(mask, ((0, 0), (0, pad))).reshape(q, -1, 32).astype(jnp.uint32)
+    return (m * (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))).sum(-1)
+
+
+def _excl_cumsum(x: jax.Array) -> jax.Array:
+    return jnp.cumsum(x, axis=-1) - x
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DeviceAtlas:
+    centroids: jax.Array    # (K, d) f32 unit-norm
+    assign: jax.Array       # (n,) i32 point -> cluster
+    csr_pts: jax.Array      # (n,) i32 point ids grouped by cluster
+    csr_offsets: jax.Array  # (K+1,) i32
+    inv_perm: jax.Array     # (n,) i32 point id -> position in csr_pts
+    presence: jax.Array     # (F, K, W) u32 cluster/field/value bitmap
+    v_cap: int = V_CAP
+
+    def tree_flatten(self):
+        return ((self.centroids, self.assign, self.csr_pts, self.csr_offsets,
+                 self.inv_perm, self.presence), (self.v_cap,))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, v_cap=aux[0])
+
+    @property
+    def n_clusters(self) -> int:
+        return self.centroids.shape[0]
+
+    @staticmethod
+    def from_atlas(atlas, v_cap: int | None = None) -> "DeviceAtlas":
+        """CSR/bitmap-pack a host AnchorAtlas (numpy build, arrays land on
+        the default device). ``v_cap=None`` auto-sizes to the largest
+        metadata code in the inverted index (≥ V_CAP, rounded up to a
+        32-bit word); an explicit v_cap must cover every code."""
+        assign = np.asarray(atlas.assign, np.int32)
+        n = assign.shape[0]
+        k = atlas.n_clusters
+        if v_cap is None:
+            vmax = max((v for by_f in atlas.cluster_index for v in by_f),
+                       default=-1)
+            v_cap = max(V_CAP, 32 * _n_words(vmax + 1))
+        order = np.argsort(assign, kind="stable").astype(np.int32)
+        offsets = np.zeros(k + 1, np.int64)
+        offsets[1:] = np.cumsum(np.bincount(assign, minlength=k))
+        inv_perm = np.empty(n, np.int32)
+        inv_perm[order] = np.arange(n, dtype=np.int32)
+        f_count = len(atlas.cluster_index)
+        pres = np.zeros((f_count, k, _n_words(v_cap)), np.uint32)
+        for f in range(f_count):
+            for v, clusters in atlas.cluster_index[f].items():
+                if not 0 <= v < v_cap:
+                    raise ValueError(
+                        f"metadata code {v} out of DeviceAtlas range "
+                        f"[0, {v_cap}); rebuild with a larger v_cap")
+                pres[f, clusters, v >> 5] |= np.uint32(1) << np.uint32(v & 31)
+        return DeviceAtlas(
+            jnp.asarray(atlas.centroids, jnp.float32), jnp.asarray(assign),
+            jnp.asarray(order), jnp.asarray(offsets, jnp.int32),
+            jnp.asarray(inv_perm), jnp.asarray(pres), v_cap=v_cap)
+
+    # -- batched query-time operations (all jittable, fixed shapes) ----------
+    def matching_clusters_batch(self, fields: jax.Array,
+                                allowed: jax.Array) -> jax.Array:
+        """Clause tables -> (Q, K) bool match mask (host matching_clusters
+        for every query at once): AND over active clauses of 'cluster has
+        ≥1 point with an allowed value on that field'."""
+        pres = self.presence[jnp.maximum(fields, 0)]        # (Q, C, K, W)
+        hit = ((pres & allowed[:, :, None, :]) != 0).any(-1)  # (Q, C, K)
+        return jnp.where((fields >= 0)[:, :, None], hit, True).all(axis=1)
+
+    def _matched_counts(self, passes: jax.Array) -> tuple[jax.Array, jax.Array]:
+        """passes (Q, n) bool -> (counts (Q, K) of matching points per
+        cluster, per-point within-cluster matched rank (Q, n) in id order,
+        for the member-cap cutoff)."""
+        k = self.n_clusters
+        cnt = jax.vmap(lambda p: jax.ops.segment_sum(
+            p.astype(jnp.int32), self.assign, num_segments=k))(passes)
+        p_csr = passes[:, self.csr_pts].astype(jnp.int32)     # (Q, n) csr order
+        inc0 = jnp.pad(jnp.cumsum(p_csr, axis=1), ((0, 0), (1, 0)))
+        starts = self.csr_offsets[self.assign[self.csr_pts]]  # (n,)
+        rank_csr = inc0[:, :-1] - inc0[:, starts]
+        return cnt, rank_csr[:, self.inv_perm]
+
+    def select_anchors_batch(
+        self, q_vecs: jax.Array, clause_tables: tuple[jax.Array, jax.Array],
+        processed: jax.Array, vectors: jax.Array, passes: jax.Array, *,
+        n_seeds: int = 10, c_max: int = 5, member_cap: int = MEMBER_CAP,
+        backend: str = "sort",
+    ) -> tuple[jax.Array, jax.Array]:
+        """One anchor-selection round for Q queries (Alg. 2 lines 3–14,
+        batched). Exact host semantics: rank matching unprocessed clusters
+        by centroid score, scan until the seed budget fills or c_max
+        clusters yield, take the nearest matching members of each visited
+        cluster (quota = remaining budget), consume every scanned cluster.
+
+        q_vecs (Q, d); clause_tables from ``pack_predicates``; processed
+        (Q, K) bool; vectors (n, d); passes (Q, n) bool. Returns
+        (seeds (Q, n_seeds) i32 -1-padded, used (Q, K) bool to OR into
+        ``processed``).
+        """
+        fields, allowed = clause_tables
+        if allowed.shape[-1] != self.presence.shape[-1]:
+            raise ValueError(
+                f"clause tables packed for {32 * allowed.shape[-1]} codes "
+                f"but atlas v_cap is {self.v_cap}; pack_predicates with "
+                f"v_cap=atlas.v_cap")
+        q_n, k = q_vecs.shape[0], self.n_clusters
+        n = vectors.shape[0]
+        n_seeds = min(n_seeds, n)
+        qidx = jnp.arange(q_n)[:, None]
+
+        avail = self.matching_clusters_batch(fields, allowed) & ~processed
+        scores = q_vecs @ self.centroids.T                    # (Q, K)
+        order = jnp.argsort(-jnp.where(avail, scores, NEG), axis=1)
+
+        cnt, rank_id = self._matched_counts(passes)
+        cnt = jnp.minimum(cnt, member_cap)
+
+        # scan ranked clusters with exclusive cumsums: a cluster is visited
+        # iff neither stop condition held when its turn came; monotone
+        # cumsums make the all-available prefix equal the visited prefix.
+        avail_r = jnp.take_along_axis(avail, order, axis=1)
+        cnt_r = jnp.take_along_axis(cnt, order, axis=1) * avail_r
+        yld_r = (cnt_r > 0).astype(jnp.int32)
+        visited_r = (avail_r & (_excl_cumsum(cnt_r) < n_seeds)
+                     & (_excl_cumsum(yld_r) < c_max))
+        used = jnp.zeros((q_n, k), bool).at[qidx, order].set(visited_r)
+
+        elig = passes & used[:, self.assign] & (rank_id < member_cap)
+        if backend == "sort":
+            seeds = self._seed_by_sort(q_vecs, vectors, elig, order, n_seeds)
+        elif backend == "topk":
+            seeds = self._seed_by_topk(q_vecs, vectors, elig, order, cnt_r,
+                                       visited_r, yld_r, n_seeds, c_max)
+        else:
+            raise ValueError(f"unknown seed backend {backend!r}")
+        return seeds, used
+
+    def _seed_by_sort(self, q_vecs, vectors, elig, order, n_seeds: int):
+        """Quota fill via one lexicographic sort: ordering every eligible
+        point by (its cluster's rank, cosine distance) and taking the first
+        n_seeds reproduces the host's cluster-by-cluster nearest-first fill,
+        including the final cluster's truncated quota."""
+        q_n, k = order.shape
+        n = vectors.shape[0]
+        qidx = jnp.arange(q_n)[:, None]
+        ranks = jnp.broadcast_to(jnp.arange(k, dtype=jnp.int32), (q_n, k))
+        cluster_rank = jnp.zeros((q_n, k), jnp.int32).at[qidx, order].set(ranks)
+        sims = jnp.einsum("qd,nd->qn", q_vecs, vectors)
+        key1 = jnp.where(elig, cluster_rank[:, self.assign], k)
+        key2 = jnp.where(elig, -sims, jnp.float32(jnp.inf))
+        pid = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (q_n, n))
+        k1s, _, ids = jax.lax.sort((key1, key2, pid), num_keys=2)
+        return jnp.where(k1s[:, :n_seeds] < k, ids[:, :n_seeds], -1)
+
+    def _seed_by_topk(self, q_vecs, vectors, elig, order, cnt_r, visited_r,
+                      yld_r, n_seeds: int, c_max: int):
+        """Quota fill via masked cosine top-k: one top-k per
+        yielding-cluster slot (≤ c_max) over the corpus with the filter
+        bitmap restricted to that slot's cluster. On TPU each slot is a
+        ``masked_cosine_topk`` Pallas call; elsewhere the slots share one
+        XLA score matmul (the ref-oracle math with the Q·n·d sweep
+        amortized across slots)."""
+        q_n = q_vecs.shape[0]
+        on_tpu = jax.default_backend() == "tpu"
+        if not on_tpu:
+            sims = jnp.einsum("qd,nd->qn", q_vecs, vectors)
+        # slot j (yield order) -> cluster id and its matched count
+        slot_pos = jnp.where(visited_r & (yld_r > 0), _excl_cumsum(yld_r),
+                             c_max)
+        qidx = jnp.arange(q_n)[:, None]
+        init = jnp.full((q_n, c_max + 1), -1, jnp.int32)
+        slot_cluster = init.at[qidx, slot_pos].set(order)[:, :c_max]
+        slot_cnt = (jnp.zeros((q_n, c_max + 1), jnp.int32)
+                    .at[qidx, slot_pos].set(cnt_r)[:, :c_max])
+        take = jnp.clip(n_seeds - _excl_cumsum(slot_cnt), 0, slot_cnt)
+        all_keys, all_ids = [], []
+        pos = jnp.arange(n_seeds, dtype=jnp.int32)[None, :]
+        for j in range(c_max):
+            mask = elig & (self.assign[None, :] == slot_cluster[:, j, None])
+            if on_tpu:
+                from repro.kernels.masked_cosine_topk import \
+                    masked_cosine_topk
+                _, ids_j = masked_cosine_topk(q_vecs, vectors,
+                                              pack_bitmap(mask), k=n_seeds,
+                                              interpret=False)
+            else:
+                s_j, ids_j = jax.lax.top_k(
+                    jnp.where(mask, sims, -jnp.inf), n_seeds)
+                ids_j = jnp.where(jnp.isfinite(s_j), ids_j, -1)
+            keep = pos < take[:, j, None]
+            all_keys.append(jnp.where(keep, j * n_seeds + pos,
+                                      jnp.int32(c_max * n_seeds)))
+            all_ids.append(jnp.where(keep, ids_j.astype(jnp.int32), -1))
+        keys = jnp.concatenate(all_keys, axis=1)
+        ids = jnp.concatenate(all_ids, axis=1)
+        ks, ids_s = jax.lax.sort((keys, ids), num_keys=1)
+        return jnp.where(ks[:, :n_seeds] < c_max * n_seeds,
+                         ids_s[:, :n_seeds], -1)

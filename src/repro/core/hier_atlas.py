@@ -108,6 +108,13 @@ class HierAtlas:
         return seeds, used
 
     # flat-atlas API passthroughs used by FiberIndex consumers
+    def to_device(self, v_cap: int | None = None):
+        """Device export delegates to the flat atlas: the hierarchy exists
+        to cut *host* centroid scoring from O(√n·d) to O(n^(1/4)·d), but on
+        device the full (Q, K) centroid matmul is a single einsum, so the
+        flat layout is both simpler and faster there (DESIGN.md §3)."""
+        return self.flat.to_device(v_cap=v_cap)
+
     def matching_clusters(self, pred):
         return self.flat.matching_clusters(pred)
 

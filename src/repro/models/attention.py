@@ -128,7 +128,8 @@ def flash_decode_sharded(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     the flash-decoding pattern, expressed in shard_map (DESIGN.md §5 SP).
     """
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
+
+    from repro.models.common import shard_map
 
     n_shards = mesh.shape[seq_axis]
     S = k_cache.shape[1]

@@ -22,10 +22,9 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
 
-from repro.models.common import CDT
+from repro.models.common import CDT, shard_map
 
 
 @dataclasses.dataclass(frozen=True)

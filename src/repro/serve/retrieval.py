@@ -14,9 +14,10 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core.atlas import AnchorAtlas
+from repro.core.batched.engine import BatchedEngine, BatchedParams
 from repro.core.graph import build_alpha_knn
 from repro.core.search import FiberIndex, SearchParams, search
-from repro.core.types import Dataset, FilterPredicate, normalize
+from repro.core.types import Dataset, FilterPredicate, Query, normalize
 from repro.models.transformer import ShardEnv, encode
 
 
@@ -24,6 +25,8 @@ from repro.models.transformer import ShardEnv, encode
 class RetrievalService:
     index: FiberIndex
     params: SearchParams
+    _engine: BatchedEngine | None = dataclasses.field(default=None,
+                                                      repr=False)
 
     @staticmethod
     def build(ds: Dataset, *, graph_k: int = 32, r_max: int = 96,
@@ -40,6 +43,32 @@ class RetrievalService:
         ids, sims, stats = search(self.index, normalize(vector), predicate,
                                   self.params, seed=seed)
         return ids, sims, stats
+
+    def engine(self) -> BatchedEngine:
+        """Lazily-built batched engine over the same index (device-resident
+        atlas; one jitted select+walk round per restart).
+
+        ``beam_width`` is deliberately NOT forwarded: SearchParams' default
+        (40) is tuned for the sequential beam walk, while the lockstep
+        engine pops one node per query per iteration and uses its own
+        small-beam default (4) — forwarding would multiply every query's
+        wall-clock by the widest beam in the batch. Pass an explicit
+        BatchedEngine for custom lockstep beams."""
+        if self._engine is None:
+            p = self.params
+            self._engine = BatchedEngine(self.index, BatchedParams(
+                k=p.k, jump_budget=p.jump_budget, n_seeds=p.n_seeds,
+                c_max=p.c_max, frontier_width=p.frontier_width,
+                stall_budget=p.stall_budget, max_hops=p.max_hops))
+        return self._engine
+
+    def query_batch(self, vectors: np.ndarray,
+                    predicates: list[FilterPredicate]):
+        """Batched filtered retrieval: all queries advance in lockstep on
+        device. Returns (list of id arrays, engine stats dict)."""
+        queries = [Query(vector=v, predicate=p)
+                   for v, p in zip(normalize(vectors), predicates)]
+        return self.engine().search(queries)
 
 
 class EncodedRetriever:
@@ -58,3 +87,9 @@ class EncodedRetriever:
         vecs = self.embed_tokens(tokens)
         return [self.service.query(v, predicate, seed=seed + i)
                 for i, v in enumerate(vecs)]
+
+    def retrieve_batch(self, tokens, predicates):
+        """Encode + batched lockstep retrieval: one predicate per prompt
+        row; the whole batch shares each jitted restart round."""
+        vecs = self.embed_tokens(tokens)
+        return self.service.query_batch(vecs, list(predicates))

@@ -28,6 +28,18 @@ def test_batched_results_pass_filter(small_index, small_queries):
             assert passes[ids].all()
 
 
+def test_batched_results_distinct_across_restarts(small_index, small_queries):
+    """A node re-reached after a restart must not occupy two result slots
+    (cross-round dedup; the sequential engine dedupes via its results
+    dict). Regression for the multi-walk duplicate-id bug."""
+    eng = BatchedEngine(small_index, BatchedParams(k=25, beam_width=4))
+    ids_b, stats = eng.search(small_queries)
+    assert (stats["walks"] > 1).any(), "sweep must exercise restarts"
+    for ids in ids_b:
+        ids = np.asarray(ids)
+        assert ids.size == np.unique(ids).size
+
+
 def test_batched_deterministic(small_index, small_queries):
     eng = BatchedEngine(small_index, BatchedParams(k=10, beam_width=4))
     a, _ = eng.search(small_queries[:8], seed=3)

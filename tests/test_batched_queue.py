@@ -1,7 +1,10 @@
 """Batched queue primitives (hypothesis): merge keeps smallest, pop shifts."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container without hypothesis: deterministic shim
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.batched.engine import INF, _merge_queue, _pop
 
@@ -29,3 +32,74 @@ def test_pop_shifts():
     xv, xi, nv, ni = _pop(v, i)
     assert float(xv[0]) == 1.0 and int(xi[0]) == 10
     assert float(nv[0, 0]) == 2.0 and int(ni[0, -1]) == -1
+
+
+def _mk_queue(vals, cap, id_base=0):
+    """Engine-invariant queue: sorted values, INF/-1 padding, unique ids."""
+    v = np.sort(np.asarray(vals, np.float32))[:cap]
+    ids = id_base + np.arange(len(v), dtype=np.int32)
+    v = np.pad(v, (0, cap - len(v)), constant_values=float(INF))
+    ids = np.pad(ids, (0, cap - len(ids)), constant_values=-1)
+    return v, ids
+
+
+@given(st.lists(st.floats(0, 10), min_size=0, max_size=12),
+       st.lists(st.floats(0, 10), min_size=1, max_size=12),
+       st.integers(1, 8))
+@settings(max_examples=60, deadline=None)
+def test_merge_invariants(a, b, cap):
+    """Output sorted ascending, capacity respected, INF slots carry id -1
+    when the inputs do, and ids stay aligned with their values."""
+    qv, qi = _mk_queue(a, cap)
+    nv, ni = _mk_queue(b, len(b), id_base=1000)
+    mv, mi = _merge_queue(jnp.asarray(qv[None]), jnp.asarray(qi[None]),
+                          jnp.asarray(nv[None]), jnp.asarray(ni[None]), cap)
+    mv, mi = np.asarray(mv[0]), np.asarray(mi[0])
+    assert mv.shape == (cap,) and mi.shape == (cap,)
+    assert (np.diff(mv) >= 0).all()                      # sorted
+    np.testing.assert_allclose(
+        mv, np.sort(np.concatenate([qv, nv]))[:cap], rtol=1e-6)
+    pad = mv >= float(INF) / 2
+    assert (mi[pad] == -1).all()                         # INF ⟺ -1 padding
+    assert (mi[~pad] >= 0).all()
+    # value/id alignment: every surviving finite pair existed in the input
+    pairs = {(round(float(v), 5), int(i))
+             for v, i in zip(np.concatenate([qv, nv]),
+                             np.concatenate([qi, ni]))}
+    for v, i in zip(mv[~pad], mi[~pad]):
+        assert (round(float(v), 5), int(i)) in pairs
+
+
+@given(st.lists(st.floats(0, 10), min_size=1, max_size=10),
+       st.lists(st.floats(0, 10), min_size=1, max_size=10),
+       st.integers(2, 8))
+@settings(max_examples=60, deadline=None)
+def test_merge_no_duplicate_ids_survive(a, b, cap):
+    """Under the engine precondition (a node enters exactly one queue once:
+    queue and candidate ids are unique and disjoint), no id survives a
+    merge twice."""
+    qv, qi = _mk_queue(a, cap)
+    nv, ni = _mk_queue(b, len(b), id_base=1000)
+    _, mi = _merge_queue(jnp.asarray(qv[None]), jnp.asarray(qi[None]),
+                         jnp.asarray(nv[None]), jnp.asarray(ni[None]), cap)
+    valid = np.asarray(mi[0])
+    valid = valid[valid >= 0]
+    assert valid.size == np.unique(valid).size
+
+
+@given(st.lists(st.floats(0, 10), min_size=0, max_size=8),
+       st.integers(1, 8))
+@settings(max_examples=40, deadline=None)
+def test_pop_preserves_invariants(a, cap):
+    """Pop returns the head, shifts left, and back-fills (INF, -1); an
+    empty queue pops (INF, -1) and stays empty."""
+    qv, qi = _mk_queue(a, cap)
+    xv, xi, nv, ni = _pop(jnp.asarray(qv[None]), jnp.asarray(qi[None]))
+    assert float(xv[0]) == qv[0] and int(xi[0]) == qi[0]
+    nv, ni = np.asarray(nv[0]), np.asarray(ni[0])
+    np.testing.assert_array_equal(nv[:-1], qv[1:])
+    np.testing.assert_array_equal(ni[:-1], qi[1:])
+    assert nv[-1] >= float(INF) / 2 and ni[-1] == -1
+    assert (np.diff(nv) >= 0).all()
+    pad = nv >= float(INF) / 2
+    assert (ni[pad] == -1).all() and (ni[~pad] >= 0).all()

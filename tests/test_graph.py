@@ -1,6 +1,9 @@
 """α-kNN graph construction invariants (paper Algorithm 1)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container without hypothesis: deterministic shim
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.graph import brute_knn, build_alpha_knn, graph_stats
 from repro.core.types import normalize

@@ -2,7 +2,10 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container without hypothesis: deterministic shim
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.types import FilterPredicate
 from repro.kernels import ops, ref

@@ -32,6 +32,30 @@ def test_generate_shapes_and_determinism(tiny_model):
     np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
 
 
+def test_query_batch_matches_filters():
+    """Batched serving path (device-resident engine) without the LM: one
+    predicate per query, results satisfy their own filters and fill k."""
+    from repro.core.types import Dataset, FilterPredicate, normalize
+
+    rng = np.random.default_rng(4)
+    n, d = 1200, 32
+    vecs = normalize(rng.standard_normal((n, d)))
+    meta = rng.integers(0, 6, (n, 4)).astype(np.int32)
+    ds = Dataset(vecs, meta, [f"f{i}" for i in range(4)], [6] * 4)
+    svc = RetrievalService.build(ds, graph_k=12, r_max=36,
+                                 params=SearchParams(k=5, max_hops=60))
+    preds = [FilterPredicate.make({0: [1]}),
+             FilterPredicate.make({1: [2], 2: [3, 4]}),
+             FilterPredicate.make({})]
+    ids, stats = svc.query_batch(rng.standard_normal((3, d)), preds)
+    assert stats["walks"].shape == (3,)
+    for pred, row in zip(preds, ids):
+        row = np.asarray(row)
+        assert row.size > 0
+        assert pred.mask(meta)[row].all()
+    assert np.asarray(ids[2]).size == 5  # unconstrained fills k
+
+
 def test_encoded_retriever(tiny_model):
     """True end-to-end RAG bridge: the corpus is built from MODEL-encoded
     documents, then model-encoded queries retrieve under a filter."""
@@ -58,3 +82,10 @@ def test_encoded_retriever(tiny_model):
             got_any = True
             assert passes[np.asarray(ids)].all()
     assert got_any
+    # batched path: same encoder, lockstep retrieval
+    ids_b, _ = retr.retrieve_batch(toks, [pred, pred])
+    assert any(len(i) for i in ids_b)
+    for ids in ids_b:
+        ids = np.asarray(ids)
+        if ids.size:
+            assert passes[ids].all()

@@ -1,12 +1,14 @@
 """Stall-regime taxonomy (paper §8): classification rules + aggregation."""
 import numpy as np
+import pytest
 
 from repro.core.search import SearchParams, run_queries
 from repro.core.stall import (REGIMES, aggregate_stalls, classify_stall,
                               regimes_by_selectivity,
                               termination_by_selectivity)
 from repro.core.types import WalkStats
-from repro.data.ground_truth import recall_at_k
+from repro.data.ground_truth import attach_ground_truth, recall_at_k
+from repro.data.synth import make_queries
 
 
 def _ws(rho, bm):
@@ -31,6 +33,55 @@ def test_threshold_is_half_selectivity():
     # rho just below sigma/2 -> cut; just above -> fold/basin
     assert classify_stall(_ws(0.049, 1), 0.1) == "topological_cut"
     assert classify_stall(_ws(0.051, 1), 0.1) == "geometric_fold"
+
+
+@pytest.fixture(scope="module")
+def sweep_run(small_ds, small_index):
+    """Fixed-seed selectivity sweep (the paper's headline empirical setup):
+    100 queries spanning <0.1% to >20% selectivity on the shared corpus."""
+    qs = make_queries(small_ds, n_queries=100, seed=2)
+    attach_ground_truth(small_ds, qs, k=10)
+    ids, stats = run_queries(small_index, qs,
+                             SearchParams(k=10, walk="guided", beam_width=4))
+    recalls = [recall_at_k(i, q.gt_ids) for i, q in zip(ids, qs)]
+    sels = [q.selectivity for q in qs]
+    return stats, sels, recalls
+
+
+def test_regimes_separate_across_selectivity(sweep_run):
+    """Regression pin for the paper's headline claim (§8): the three failure
+    regimes separate cleanly across a selectivity sweep — topological cuts
+    dominate selective filters, genuine basins emerge only at permissive
+    ones."""
+    stats, sels, recalls = sweep_run
+    rows = {r["bin"]: r for r in regimes_by_selectivity(stats, sels, recalls)}
+    low = [rows["<0.1%"], rows["0.1%-1%"]]
+    high = [rows["5%-20%"], rows[">20%"]]
+    for r in low + high:
+        assert r["n"] >= 4, "sweep must populate the end bins"
+    for r in low:
+        assert r["topological_cut"] >= 0.6, r
+        assert r["genuine_basin"] <= 0.05, r
+    for r in high:
+        assert r["topological_cut"] <= 0.5, r
+        assert r["genuine_basin"] >= 0.15, r
+    # hops shrink as the fiber thickens (walks stall later, restart less)
+    assert rows["<0.1%"]["hops"] > rows[">20%"]["hops"]
+
+
+def test_regime_diagnostics_separate(sweep_run):
+    """Stall-point diagnostics must separate by regime (paper Table 6): cuts
+    sit in near-empty fibers (rho ≪), folds have boundary-improving
+    neighbours, basins by definition none."""
+    stats, sels, recalls = sweep_run
+    t6 = aggregate_stalls(stats, sels, recalls)
+    for r in REGIMES:
+        assert t6[r]["count"] >= 5, (r, t6[r])
+    assert t6["topological_cut"]["rho"] < 0.1
+    assert t6["topological_cut"]["rho"] < t6["geometric_fold"]["rho"]
+    assert t6["topological_cut"]["rho"] < t6["genuine_basin"]["rho"]
+    assert t6["geometric_fold"]["b_minus"] > 0
+    assert t6["genuine_basin"]["b_minus"] == 0
 
 
 def test_aggregation_tables(small_index, small_queries):

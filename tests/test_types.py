@@ -1,6 +1,9 @@
 """FilterPredicate invariants (hypothesis property tests)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container without hypothesis: deterministic shim
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.types import FilterPredicate, normalize
 
