@@ -2,11 +2,17 @@
 
 Prints ``name,us_per_call,derived`` CSV lines (per harness contract) plus
 human-readable tables, and writes results/benchmarks.json for EXPERIMENTS.md.
+
+Every run starts with a kernel/oracle parity gate and exits nonzero on any
+mismatch, so a drifting kernel can't silently poison the numbers.
+``--smoke`` runs only the parity gate plus a tiny end-to-end search bench
+(2 queries) — the CI guard that keeps these entrypoints from rotting.
 """
 from __future__ import annotations
 
 import json
 import os
+import sys
 import time
 
 
@@ -14,13 +20,92 @@ def _csv(name: str, us: float, derived: str) -> None:
     print(f"{name},{us:.1f},{derived}")
 
 
+def kernel_oracle_parity() -> list[str]:
+    """Fixed-shape parity probes: every Pallas entrypoint (interpret mode
+    off-TPU, Mosaic on) vs its jnp oracle. Returns a list of mismatch
+    descriptions (empty = all good)."""
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.core.device_atlas import pack_predicates
+    from repro.core.types import FilterPredicate
+    from repro.kernels import ops, ref
+
+    rng = np.random.default_rng(0)
+    n, d, q_n, r = 800, 64, 6, 24
+    corpus = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    queries = jnp.asarray(rng.standard_normal((q_n, d)), jnp.float32)
+    bitmap = jnp.asarray(
+        rng.integers(0, 2**32, (q_n, (n + 31) // 32), dtype=np.uint32))
+    ids = jnp.asarray(rng.integers(-1, n, (q_n, r)), jnp.int32)
+    meta = jnp.asarray(rng.integers(-1, 40, (n, 6)), jnp.int32)
+    preds = [FilterPredicate.make({0: [3, 4], 2: [1]}),
+             FilterPredicate.make({1: list(range(10))}),
+             FilterPredicate.make({})] * 2
+    f_np, a_np = pack_predicates(preds, v_cap=64)
+    fields_b, allowed_b = jnp.asarray(f_np), jnp.asarray(a_np)
+    fields1 = jnp.asarray([0, 5, -1, -1], jnp.int32)
+    allowed1 = jnp.asarray(rng.integers(0, 2, (4, 256)), jnp.uint8)
+
+    fails: list[str] = []
+
+    def _chk(name, got, want, exact=False):
+        got, want = np.asarray(got), np.asarray(want)
+        ok = (np.array_equal(got, want) if exact
+              else np.allclose(got, want, rtol=1e-4, atol=1e-4))
+        if not ok:
+            fails.append(f"{name}: kernel != oracle")
+
+    s_k, _ = ops.masked_cosine_topk(queries, corpus, bitmap, k=16)
+    s_r, _ = ref.masked_cosine_topk(queries, corpus, bitmap, 16)
+    _chk("masked_cosine_topk", s_k, s_r)
+    _chk("fiber_expand", ops.fiber_expand(queries, corpus, ids, bitmap),
+         ref.fiber_expand(queries, corpus, ids, bitmap))
+    wk = ops.fiber_expand_walk(queries, corpus, ids, bitmap)
+    wr = ref.fiber_expand_walk(queries, corpus, ids, bitmap)
+    _chk("fiber_expand_walk/sims", wk[0], wr[0])
+    _chk("fiber_expand_walk/sims_pass", wk[1], wr[1])
+    _chk("filter_eval", ops.filter_eval(meta, fields1, allowed1, tn=128),
+         ref.filter_eval(meta, fields1, allowed1), exact=True)
+    _chk("filter_eval_batch",
+         ops.filter_eval_batch(meta, fields_b, allowed_b, tn=128),
+         ref.filter_eval_batch(meta, fields_b, allowed_b), exact=True)
+    return fails
+
+
+def parity_gate() -> None:
+    fails = kernel_oracle_parity()
+    if fails:
+        for f in fails:
+            print(f"PARITY FAIL: {f}", file=sys.stderr)
+        sys.exit(1)
+    print("[parity] all kernels match their oracles")
+
+
+def smoke() -> None:
+    """CI smoke: parity gate + tiny end-to-end search bench (2 queries)."""
+    from benchmarks.search_bench import main as search_main
+
+    parity_gate()
+    t0 = time.time()
+    res = search_main(smoke=True)
+    cell = next(v for k, v in res.items() if k != "config")
+    assert cell["dispatches_per_batch"] == 1, cell
+    assert 0.0 <= cell["recall"] <= 1.0
+    _csv("search/smoke", 1e6 / cell["qps"],  # us/query, same unit as main()
+         f"recall={cell['recall']:.3f}")
+    print(f"[smoke search bench {time.time()-t0:.0f}s] OK")
+
+
 def main() -> None:
     from benchmarks import tables as T
     from benchmarks.kernel_bench import (anchor_select_bench, engine_bench,
                                          kernel_microbench)
+    from benchmarks.search_bench import OUT_PATH as SEARCH_OUT
+    from benchmarks.search_bench import search_bench, write_baseline
 
     results: dict = {}
     t_all = time.time()
+    parity_gate()
 
     t0 = time.time()
     results["table2"] = T.table2_recall()
@@ -106,6 +191,19 @@ def main() -> None:
          f"recall={e['batched_recall']:.3f}")
     print(f"[kernels+engine {time.time()-t0:.0f}s]")
 
+    t0 = time.time()
+    results["search"] = search_bench()
+    write_baseline(results["search"])
+    print("\n== Fused single-dispatch search (Q x selectivity) ==")
+    for name, r in results["search"].items():
+        if name == "config":
+            continue
+        print(f"{name:14s} qps={r['qps']:8.1f} p50={r['p50_ms']:7.1f}ms "
+              f"p99={r['p99_ms']:7.1f}ms recall={r['recall']:.3f} "
+              f"mask={r['mask_state_bytes']/1024:.0f}KiB")
+        _csv(f"search/{name}", 1e6 / r["qps"], f"recall={r['recall']:.3f}")
+    print(f"[search bench {time.time()-t0:.0f}s] -> {SEARCH_OUT}")
+
     os.makedirs("results", exist_ok=True)
     with open("results/benchmarks.json", "w") as f:
         json.dump(results, f, indent=1, default=float)
@@ -113,4 +211,7 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    if "--smoke" in sys.argv:
+        smoke()
+    else:
+        main()

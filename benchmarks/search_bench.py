@@ -1,0 +1,111 @@
+"""End-to-end filtered-search benchmark for the fused single-dispatch
+engine: QPS, p50/p99 batch latency, and recall over the Q x selectivity
+grid (Q in {16, 64, 256}, selectivity in {0.5, 0.1, 0.02}).
+
+Writes ``BENCH_search.json`` at the repo root (results/ is gitignored and
+this baseline is meant to be committed) — the first datapoint of the
+serving perf trajectory. Each cell also records the walk mask-state footprint
+(3 packed uint32 bitmaps: visited / in-results / pass = 3 * Q * ceil(n/32)
+* 4 bytes) so regressions back to dense (Q, n) bool masks are visible.
+
+``--smoke`` (or smoke=True) runs a tiny corpus with 2 queries: the CI
+entrypoint guard, not a measurement.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core.atlas import AnchorAtlas
+from repro.core.batched.engine import BatchedEngine, BatchedParams
+from repro.core.graph import build_alpha_knn
+from repro.core.search import FiberIndex
+from repro.data.ground_truth import attach_ground_truth, recall_at_k
+from repro.data.synth import make_selectivity_dataset, make_selectivity_queries
+
+SELECTIVITIES = (0.5, 0.1, 0.02)
+BATCH_SIZES = (16, 64, 256)
+OUT_PATH = "BENCH_search.json"
+
+
+def search_bench(batch_sizes=BATCH_SIZES, selectivities=SELECTIVITIES, *,
+                 n: int = 8000, d: int = 64, k: int = 10, reps: int = 20,
+                 graph_k: int = 16, seed: int = 7) -> dict:
+    """Fused single-dispatch engine over the Q x selectivity grid. Returns
+    {"qN/selS": {qps, p50_ms, p99_ms, recall, walks, hops, mask_state_bytes,
+    dispatches_per_batch}} plus a "config" entry."""
+    ds = make_selectivity_dataset(selectivities, n=n, d=d, n_components=24,
+                                  seed=seed)
+    graph = build_alpha_knn(ds.vectors, k=graph_k, r_max=3 * graph_k,
+                            alpha=1.2)
+    atlas = AnchorAtlas.build(ds, seed=0)
+    index = FiberIndex(ds.vectors, ds.metadata, graph, atlas)
+    eng = BatchedEngine(index, BatchedParams(k=k, beam_width=4))
+    n_words = (n + 31) // 32
+    out: dict = {"config": {"n": n, "d": d, "k": k, "reps": reps,
+                            "graph_k": graph_k,
+                            "backend": __import__("jax").default_backend()}}
+    q_max = max(batch_sizes)
+    pools = {}
+    for si, s in enumerate(selectivities):
+        qs = make_selectivity_queries(ds, si, q_max)
+        attach_ground_truth(ds, qs, k=k)
+        pools[s] = qs
+    for q_n in batch_sizes:
+        for si, sel in enumerate(selectivities):
+            batch = pools[sel][:q_n]
+            d0 = eng.dispatches
+            ids, stats = eng.search(batch)  # compile at this batch shape
+            disp = eng.dispatches - d0
+            lat = []
+            for _ in range(reps):
+                t0 = time.time()
+                ids, stats = eng.search(batch)
+                lat.append(time.time() - t0)
+            lat_ms = np.asarray(lat) * 1e3
+            rec = float(np.mean([recall_at_k(np.asarray(i), q.gt_ids)
+                                 for i, q in zip(ids, batch)]))
+            out[f"q{q_n}/sel{sel}"] = {
+                "qps": q_n * reps / float(np.sum(lat)),
+                "p50_ms": float(np.percentile(lat_ms, 50)),
+                "p99_ms": float(np.percentile(lat_ms, 99)),
+                "recall": rec,
+                "mean_walks": float(np.mean(stats["walks"])),
+                "mean_hops": float(np.mean(stats["hops"])),
+                "mask_state_bytes": 3 * q_n * n_words * 4,
+                "dispatches_per_batch": disp,
+            }
+    return out
+
+
+def write_baseline(results: dict, path: str = OUT_PATH) -> None:
+    parent = os.path.dirname(path)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(results, f, indent=1, default=float)
+
+
+def main(smoke: bool = False) -> dict:
+    if smoke:
+        results = search_bench(batch_sizes=(2,), selectivities=(0.5,),
+                               n=600, d=16, k=5, reps=1, graph_k=8)
+    else:
+        results = search_bench()
+        write_baseline(results)
+    return results
+
+
+if __name__ == "__main__":
+    import sys
+    res = main(smoke="--smoke" in sys.argv)
+    for name, r in res.items():
+        if name == "config":
+            continue
+        print(f"{name:14s} qps={r['qps']:8.1f} p50={r['p50_ms']:7.1f}ms "
+              f"p99={r['p99_ms']:7.1f}ms recall={r['recall']:.3f} "
+              f"mask={r['mask_state_bytes']/1024:.0f}KiB "
+              f"dispatch={r['dispatches_per_batch']}")

@@ -1,0 +1,81 @@
+"""Packed uint32 bitmaps for the lockstep walk state (DESIGN.md §3).
+
+The batched walk used to carry three dense ``(Q, n)`` bool masks (visited,
+in-results, filter-pass) — ~256 MB of mask state for a 256-query batch over
+a million-point corpus. Packing each mask into ``(Q, ceil(n/32)) uint32``
+words cuts that memory and its per-hop scatter/gather traffic 8×, and is
+the same layout ``filter_eval`` already emits and the Pallas kernels probe:
+bit ``i`` of word ``w`` holds entry ``32*w + i``.
+
+All helpers are jittable fixed-shape ops. ``set_bits`` is a scatter-OR
+built from scatter-add: it dedupes indices within a row and drops
+already-set bits first, so ``add == or`` exactly (property-tested against
+bool-mask oracles in ``tests/test_bitmap.py``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_ONE = jnp.uint32(1)
+
+
+def n_words(n: int) -> int:
+    """Words needed to hold ``n`` bits."""
+    return -(-n // 32)
+
+
+def pack_bits(mask: jax.Array) -> jax.Array:
+    """``(..., n) bool -> (..., ceil(n/32)) uint32``; bit i of word w is
+    entry 32*w + i. Pad bits (beyond n) are 0."""
+    *lead, n = mask.shape
+    pad = (-n) % 32
+    m = jnp.pad(mask, [(0, 0)] * len(lead) + [(0, pad)])
+    m = m.reshape(*lead, -1, 32).astype(jnp.uint32)
+    return (m * (_ONE << jnp.arange(32, dtype=jnp.uint32))).sum(-1)
+
+
+def unpack_bits(bm: jax.Array, n: int) -> jax.Array:
+    """``(..., W) uint32 -> (..., n) bool`` (inverse of ``pack_bits``)."""
+    bits = (bm[..., None] >> jnp.arange(32, dtype=jnp.uint32)) & _ONE
+    flat = bits.reshape(*bm.shape[:-1], bm.shape[-1] * 32)
+    return flat[..., :n].astype(bool)
+
+
+def test_bits(bm: jax.Array, idx: jax.Array) -> jax.Array:
+    """Gather bits: ``bm (Q, W) uint32``, ``idx (Q, m) int32`` ->
+    ``(Q, m) bool``. Negative indices test False (pad convention)."""
+    safe = jnp.maximum(idx, 0)
+    word = jnp.take_along_axis(bm, (safe >> 5).astype(jnp.int32), axis=1)
+    bit = (word >> (safe & 31).astype(jnp.uint32)) & _ONE
+    return bit.astype(bool) & (idx >= 0)
+
+
+def set_bits(bm: jax.Array, idx: jax.Array, on: jax.Array) -> jax.Array:
+    """Scatter-OR: set bit ``idx[q, j]`` of row q where ``on[q, j]``.
+
+    Negative indices are ignored. Safe for duplicate indices within a row
+    and for bits that are already set: only the first ``on`` occurrence of
+    a not-yet-set index contributes ``1 << (idx & 31)`` to its word, so the
+    underlying scatter-add equals a bitwise OR.
+    """
+    q, m = idx.shape
+    safe = jnp.maximum(idx, 0)
+    on = on & (idx >= 0) & ~test_bits(bm, idx)
+    # dup[q, j] <=> an earlier position i<j carries the same index with on
+    eq = safe[:, :, None] == safe[:, None, :]            # [q, i, j]
+    earlier = jnp.arange(m)[:, None] < jnp.arange(m)[None, :]
+    dup = (eq & on[:, :, None] & earlier[None]).any(axis=1)
+    add = jnp.where(on & ~dup, _ONE << (safe & 31).astype(jnp.uint32),
+                    jnp.uint32(0))
+    return bm.at[jnp.arange(q)[:, None], safe >> 5].add(add)
+
+
+def popcount(bm: jax.Array) -> jax.Array:
+    """``(..., W) uint32 -> (...,) int32`` total set bits (SWAR per word)."""
+    x = bm
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    per_word = (x * jnp.uint32(0x01010101)) >> 24
+    return per_word.astype(jnp.int32).sum(-1)

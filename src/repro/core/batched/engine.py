@@ -1,16 +1,20 @@
 """Batched TPU-native drift-guided search (beyond-paper engine).
 
 Runs Q queries in lockstep as one ``lax.while_loop``: all walk state is
-fixed-shape (visited masks, V-sorted fixed-capacity frontier/beam queues,
-running top-k results), one iteration expands one node per active query,
-and every distance computation is a batched gather+einsum (the
-``fiber_expand`` Pallas kernel on TPU).
+fixed-shape (packed uint32 visited/in-results/pass bitmaps, V-sorted
+fixed-capacity frontier/beam queues, running top-k results), one iteration
+expands one node per active query, and every expansion distance comes from
+the ``fiber_expand_walk`` Pallas kernel on TPU (the jnp oracle elsewhere),
+which applies the packed pass bitmap in-kernel.
 
-Anchor restarts are device-resident too: each restart round is ONE jitted
-call (``atlas_round``) that selects anchors for all Q queries from the
-packed ``DeviceAtlas`` and runs the lockstep walk — the host keeps only
-the round loop and the processed-cluster bitmask, mirroring Algorithm 2
-without per-query Python.
+A whole filtered search batch is ONE device dispatch (``search_batch``):
+predicate evaluation (batched ``filter_eval``), the restart round loop
+(an outer ``lax.while_loop`` over ``atlas_round`` — batched anchor
+selection from the packed ``DeviceAtlas`` + the lockstep walk), and the
+per-round walks/hops stats all run on device; the host syncs once per
+batch to fetch results. ``BatchedEngine.search_hostloop`` keeps the PR 1
+host-driven round loop (one jitted call per round, two scalar syncs) as
+the parity baseline.
 
 Vectorization deltas vs the sequential reference (recorded in DESIGN.md §3
 and validated for recall parity in tests):
@@ -28,9 +32,13 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core.batched.bitmap import (n_words, popcount, set_bits,
+                                       test_bits, unpack_bits)
 from repro.core.device_atlas import DeviceAtlas, pack_predicates
 from repro.core.search import FiberIndex, SearchParams
 from repro.core.types import Query
+from repro.kernels import ref
+from repro.kernels.ops import MAX_CLAUSES
 
 INF = jnp.float32(3.4e38)
 
@@ -65,13 +73,36 @@ def _pop(q_v, q_i):
     return x_v, x_i, q_v, q_i
 
 
-def walk_batch(vectors, adjacency, passes, q_vecs, seeds,
+def _expand_scores(q_vecs, vectors, nbrs, pass_bm):
+    """Neighbour gather + dot with the pass bitmap applied in the same pass:
+    the fiber_expand_walk Pallas kernel on TPU, the jnp oracle elsewhere
+    (DESIGN.md §3). Returns (sims, sims_pass), -inf masked."""
+    if jax.default_backend() == "tpu":
+        from repro.kernels.fiber_expand import fiber_expand_walk
+        return fiber_expand_walk(q_vecs, vectors, nbrs, pass_bm,
+                                 interpret=False)
+    return ref.fiber_expand_walk(q_vecs, vectors, nbrs, pass_bm)
+
+
+def _eval_passes(metadata, fields, allowed):
+    """Batched predicate evaluation -> packed (Q, ceil(n/32)) uint32 pass
+    bitmaps: the filter_eval Pallas corpus sweep on TPU, the jnp oracle
+    elsewhere."""
+    if jax.default_backend() == "tpu":
+        from repro.kernels.filter_eval import filter_eval_batch
+        return filter_eval_batch(metadata, fields, allowed, interpret=False)
+    return ref.filter_eval_batch(metadata, fields, allowed)
+
+
+def walk_batch(vectors, adjacency, pass_bm, q_vecs, seeds,
                p: BatchedParams, init_results=None):
     """One lockstep walk round.
 
-    vectors (n, d) f32; adjacency (n, R) i32 (-1 pad); passes (Q, n) bool;
-    q_vecs (Q, d); seeds (Q, S) i32 (-1 pad). Returns dict of results +
-    diagnostics.
+    vectors (n, d) f32; adjacency (n, R) i32 (-1 pad); pass_bm
+    (Q, ceil(n/32)) uint32 packed filter bitmaps; q_vecs (Q, d); seeds
+    (Q, S) i32 (-1 pad). Returns dict of results + diagnostics. All
+    per-point walk state (visited / in-results / pass) is bitmap-packed:
+    O(Q*n/32) bytes instead of three dense (Q, n) bool masks.
     """
     n, d = vectors.shape
     Q = q_vecs.shape[0]
@@ -83,8 +114,8 @@ def walk_batch(vectors, adjacency, passes, q_vecs, seeds,
     seed_sims = jnp.einsum("qsd,qd->qs", vectors[safe_seeds], q_vecs)
     seed_v = jnp.where(seed_valid, 1.0 - seed_sims, INF)
 
-    visited = jnp.zeros((Q, n), bool)
-    visited = visited.at[jnp.arange(Q)[:, None], safe_seeds].max(seed_valid)
+    visited = set_bits(jnp.zeros((Q, n_words(n)), jnp.uint32),
+                       seeds, seed_valid)
 
     frontier_v, frontier_i = _merge_queue(
         jnp.full((Q, F), INF), jnp.full((Q, F), -1, jnp.int32),
@@ -99,14 +130,13 @@ def walk_batch(vectors, adjacency, passes, q_vecs, seeds,
     if init_results is None:
         res0_v = jnp.full((Q, k), INF)
         res0_i = jnp.full((Q, k), -1, jnp.int32)
-        in_res = jnp.zeros((Q, n), bool)
+        in_res = jnp.zeros((Q, n_words(n)), jnp.uint32)
     else:
         res0_v, res0_i = init_results
-        in_res = jnp.zeros((Q, n), bool).at[
-            jnp.arange(Q)[:, None], jnp.maximum(res0_i, 0)].max(res0_i >= 0)
+        in_res = set_bits(jnp.zeros((Q, n_words(n)), jnp.uint32),
+                          res0_i, res0_i >= 0)
 
-    seed_pass = (jnp.take_along_axis(passes, safe_seeds, axis=1) & seed_valid
-                 & ~jnp.take_along_axis(in_res, safe_seeds, axis=1))
+    seed_pass = test_bits(pass_bm, seeds) & ~test_bits(in_res, seeds)
     res_v, res_i = _merge_queue(res0_v, res0_i,
                                 jnp.where(seed_pass, seed_v, INF), seeds, k)
 
@@ -153,20 +183,21 @@ def walk_batch(vectors, adjacency, passes, q_vecs, seeds,
         nbrs = adjacency[xs]                                    # (Q, R)
         sn = jnp.maximum(nbrs, 0)
         nvalid = (nbrs >= 0) & live[:, None]
-        seen = jnp.take_along_axis(s["visited"], sn, axis=1)
+        seen = test_bits(s["visited"], sn)
         new = nvalid & ~seen
-        visited = s["visited"].at[jnp.arange(Q)[:, None], sn].max(new)
-        sims = jnp.einsum("qrd,qd->qr", vectors[sn], q_vecs)
+        visited = set_bits(s["visited"], sn, new)
+        # one gather+dot yields both traversal distances and pass-masked
+        # candidates (the kernel probes the pass bitmap in the same pass)
+        sims, sims_p = _expand_scores(q_vecs, vectors, nbrs, pass_bm)
         v_n = 1.0 - sims
-        pass_r = jnp.take_along_axis(passes, sn, axis=1) & nvalid
+        pass_r = jnp.isfinite(sims_p) & live[:, None]
         # results: merge new filtered, minus nodes a prior round already
         # banked (in_res is static within the round: nodes merged this
         # round are first-seen, so `new` already excludes them)
-        in_res_r = jnp.take_along_axis(in_res, sn, axis=1)
+        in_res_r = test_bits(in_res, sn)
         cand_v = jnp.where(new & pass_r & ~in_res_r, v_n, INF)
         res_v, res_i = _merge_queue(s["res_v"], s["res_i"], cand_v, nbrs, k)
         # local signals
-        n_valid = jnp.maximum(nvalid.sum(1), 1)
         n_pass = pass_r.sum(1)
         vx = 1.0 - jnp.einsum("qd,qd->q", vectors[xs], q_vecs)
         drift = jnp.where(
@@ -206,14 +237,11 @@ def walk_batch(vectors, adjacency, passes, q_vecs, seeds,
         re_ids = jnp.take_along_axis(nbrs, rsel, axis=1)
         has_cand = (-rv[:, 0]) < INF / 2
         reenter = reenter & has_cand
-        frontier_v = jnp.where(reenter[:, None],
-                               _merge_queue(jnp.full_like(frontier_v, INF),
-                                            jnp.full_like(frontier_i, -1),
-                                            -rv, re_ids, F)[0], frontier_v)
-        frontier_i = jnp.where(reenter[:, None],
-                               _merge_queue(jnp.full_like(frontier_v, INF),
-                                            jnp.full_like(frontier_i, -1),
-                                            -rv, re_ids, F)[1], frontier_i)
+        re_fv, re_fi = _merge_queue(jnp.full_like(frontier_v, INF),
+                                    jnp.full_like(frontier_i, -1),
+                                    -rv, re_ids, F)
+        frontier_v = jnp.where(reenter[:, None], re_fv, frontier_v)
+        frontier_i = jnp.where(reenter[:, None], re_fi, frontier_i)
         beam_v = jnp.where(reenter[:, None], INF, beam_v)
         beam_i = jnp.where(reenter[:, None], -1, beam_i)
         new_phase = jnp.where(to2, 2, phase)
@@ -229,22 +257,25 @@ def walk_batch(vectors, adjacency, passes, q_vecs, seeds,
     term = jnp.where(out["term"] == TERM_RUNNING, TERM_MAXHOP, out["term"])
     return dict(res_v=out["res_v"], res_i=out["res_i"], term=term,
                 hops=out["hops"], p1_hops=out["p1_hops"],
-                visited=out["visited"])
+                visited_bm=out["visited"])
 
 
-def atlas_round(datlas: DeviceAtlas, vectors, adjacency, passes, q_vecs,
-                fields, allowed, processed, need, res_v, res_i,
+def atlas_round(datlas: DeviceAtlas, vectors, adjacency, pass_bm, passes,
+                q_vecs, fields, allowed, processed, need, res_v, res_i,
                 p: BatchedParams, seed_backend: str):
     """One full restart round for all Q queries on device: batched anchor
-    selection from the packed atlas, then the lockstep walk. Queries with
-    ``need`` false see an all-processed atlas and so get no seeds; a query
-    with no seeds converges on its first walk iteration with its results
-    untouched."""
+    selection from the packed atlas, then the lockstep walk. ``pass_bm``
+    is the packed (Q, ceil(n/32)) uint32 filter bitmap the walk carries;
+    ``passes`` is its dense (Q, n) bool unpack for the selection math —
+    round-invariant, so callers unpack once per batch instead of once per
+    round. Queries with ``need`` false see an all-processed atlas and so
+    get no seeds; a query with no seeds converges on its first walk
+    iteration with its results untouched."""
     gate = processed | ~need[:, None]
     seeds, used = datlas.select_anchors_batch(
         q_vecs, (fields, allowed), gate, vectors, passes,
         n_seeds=p.n_seeds, c_max=p.c_max, backend=seed_backend)
-    out = walk_batch(vectors, adjacency, passes, q_vecs, seeds, p,
+    out = walk_batch(vectors, adjacency, pass_bm, q_vecs, seeds, p,
                      init_results=(res_v, res_i))
     found = (out["res_v"] < INF / 2).sum(axis=1)
     return dict(res_v=out["res_v"], res_i=out["res_i"],
@@ -252,12 +283,68 @@ def atlas_round(datlas: DeviceAtlas, vectors, adjacency, passes, q_vecs,
                 seeded=seeds[:, 0] >= 0, hops=out["hops"])
 
 
-class BatchedEngine:
-    """Host-driven restart loop around the jit'd select+walk round.
+def search_batch(datlas: DeviceAtlas, vectors, adjacency, metadata, q_vecs,
+                 fields, allowed, p: BatchedParams, seed_backend: str):
+    """A whole filtered search batch as ONE device program: batched
+    predicate evaluation, then a ``lax.while_loop`` over restart rounds
+    (each round = ``atlas_round``). "Anyone seeded?" / "anyone still short
+    of k?" are device predicates in the loop condition; per-round walks and
+    hops accumulate in fixed-shape carries. Mirrors the PR 1 host round
+    loop exactly: a round where nobody seeded is discarded wholesale (it
+    cannot change results) and ends the loop."""
+    Q = q_vecs.shape[0]
+    pass_bm = _eval_passes(metadata, fields, allowed)
+    # the dense unpack feeds only selection math and is round-invariant:
+    # hoist it out of the while_loop so each round reuses one buffer
+    passes = unpack_bits(pass_bm, vectors.shape[0])
+    rounds = p.jump_budget + 1
+    init = dict(
+        processed=jnp.zeros((Q, datlas.n_clusters), bool),
+        # a query with zero passing points can never seed or gain results:
+        # starting it need-False keeps inert lanes (e.g. serve-bucket pads)
+        # from holding the loop open one extra no-op round
+        need=popcount(pass_bm) > 0,
+        res_v=jnp.full((Q, p.k), INF),
+        res_i=jnp.full((Q, p.k), -1, jnp.int32),
+        hops=jnp.zeros(Q, jnp.int32), walks=jnp.zeros(Q, jnp.int32),
+        r=jnp.asarray(0, jnp.int32), go=jnp.asarray(True))
 
-    The host keeps only per-batch constants and the round loop; anchor
-    selection state (the processed-cluster bitmask) and results live on
-    device between rounds.
+    def cond(c):
+        return c["go"] & (c["r"] < rounds)
+
+    def body(c):
+        out = atlas_round(datlas, vectors, adjacency, pass_bm, passes,
+                          q_vecs, fields, allowed, c["processed"], c["need"],
+                          c["res_v"], c["res_i"], p=p,
+                          seed_backend=seed_backend)
+        seeded = out["seeded"]
+        any_seeded = seeded.any()
+        res_v = jnp.where(any_seeded, out["res_v"], c["res_v"])
+        res_i = jnp.where(any_seeded, out["res_i"], c["res_i"])
+        processed = jnp.where(any_seeded, out["processed"], c["processed"])
+        need = jnp.where(any_seeded, out["need"], c["need"])
+        hops = c["hops"] + jnp.where(any_seeded, out["hops"], 0)
+        walks = c["walks"] + jnp.where(any_seeded,
+                                       seeded.astype(jnp.int32), 0)
+        return dict(processed=processed, need=need, res_v=res_v, res_i=res_i,
+                    hops=hops, walks=walks, r=c["r"] + 1,
+                    go=any_seeded & need.any())
+
+    out = jax.lax.while_loop(cond, body, init)
+    return dict(res_v=out["res_v"], res_i=out["res_i"], hops=out["hops"],
+                walks=out["walks"])
+
+
+class BatchedEngine:
+    """Single-dispatch batched search over a device-resident index.
+
+    ``search`` issues exactly one jitted call per batch (predicate eval +
+    restart loop + walks fused in ``search_batch``) and one host sync to
+    fetch results; ``dispatches`` counts compiled-callable invocations so
+    tests can assert that. ``search_hostloop`` keeps the PR 1 host-driven
+    round loop (one jitted ``atlas_round`` per round) as the parity and
+    migration baseline. On non-CPU backends the per-round state buffers
+    (processed/need/res_v/res_i) are donated into the round call.
     """
 
     def __init__(self, index: FiberIndex,
@@ -266,37 +353,77 @@ class BatchedEngine:
         self.index = index
         self.p = params
         self.datlas = index.atlas.to_device(v_cap=v_cap)
-        self._round = jax.jit(functools.partial(
-            atlas_round, p=params, seed_backend=seed_backend))
+        on_cpu = jax.default_backend() == "cpu"  # donation unsupported there
+        self._round = jax.jit(
+            functools.partial(atlas_round, p=params,
+                              seed_backend=seed_backend),
+            donate_argnums=() if on_cpu else (8, 9, 10, 11))
+        self._search = jax.jit(
+            functools.partial(search_batch, p=params,
+                              seed_backend=seed_backend),
+            donate_argnums=() if on_cpu else (4, 5, 6))
+        self._passes = jax.jit(_eval_passes)
         self.vectors = jnp.asarray(index.vectors)
         self.adjacency = jnp.asarray(index.graph.neighbors)
+        self.metadata = jnp.asarray(index.metadata)
+        self.dispatches = 0
+
+    def _pack_queries(self, queries: list[Query]):
+        q_vecs = jnp.asarray(np.stack([q.vector for q in queries]))
+        # pin the clause dimension to at least MAX_CLAUSES so batches with
+        # differing (common, small) clause counts share one compiled
+        # program; rarer wider predicates still get an exact fit
+        n_cl = max((q.predicate.n_clauses for q in queries), default=0)
+        f_np, a_np = pack_predicates([q.predicate for q in queries],
+                                     max_clauses=max(MAX_CLAUSES, n_cl),
+                                     v_cap=self.datlas.v_cap)
+        return q_vecs, jnp.asarray(f_np), jnp.asarray(a_np)
 
     def search(self, queries: list[Query], seed: int = 0):
-        """Filtered top-k for a batch. ``seed`` is kept for API compat; the
-        device path is deterministic (seeds are nearest matching members,
-        never random samples)."""
+        """Filtered top-k for a batch: one device dispatch, one host sync.
+        ``seed`` is kept for API compat; the device path is deterministic
+        (seeds are nearest matching members, never random samples)."""
+        del seed
+        Q = len(queries)
+        q_vecs, fields, allowed = self._pack_queries(queries)
+        out = self._search(self.datlas, self.vectors, self.adjacency,
+                           self.metadata, q_vecs, fields, allowed)
+        self.dispatches += 1
+        host = jax.device_get(out)  # the batch's single host sync
+        res_v, res_i = host["res_v"], host["res_i"]
+        ids = [res_i[i][res_v[i] < INF / 2] for i in range(Q)]
+        stats = {"walks": host["walks"].astype(np.int32),
+                 "hops": host["hops"].astype(np.int64)}
+        return ids, stats
+
+    def search_hostloop(self, queries: list[Query], seed: int = 0):
+        """PR 1 semantics: host round loop, one jitted select+walk call and
+        two scalar syncs per round. Kept as the exact-parity baseline for
+        ``search`` (tests) and for incremental debugging."""
         del seed
         p = self.p
         Q = len(queries)
-        q_vecs = jnp.asarray(np.stack([q.vector for q in queries]))
-        passes = jnp.asarray(np.stack(
-            [q.predicate.mask(self.index.metadata) for q in queries]))
-        f_np, a_np = pack_predicates([q.predicate for q in queries],
-                                     v_cap=self.datlas.v_cap)
-        fields, allowed = jnp.asarray(f_np), jnp.asarray(a_np)
+        q_vecs, fields, allowed = self._pack_queries(queries)
+        pass_bm = self._passes(self.metadata, fields, allowed)
+        self.dispatches += 1
+        passes = unpack_bits(pass_bm, self.vectors.shape[0])
         processed = jnp.zeros((Q, self.datlas.n_clusters), bool)
-        need = jnp.ones(Q, bool)
+        need = popcount(pass_bm) > 0  # mirror search_batch's need init
         res_v = jnp.full((Q, p.k), INF)
         res_i = jnp.full((Q, p.k), -1, jnp.int32)
         stats = {"walks": np.zeros(Q, np.int32), "hops": np.zeros(Q, np.int64)}
         for _ in range(p.jump_budget + 1):
             out = self._round(self.datlas, self.vectors, self.adjacency,
-                              passes, q_vecs, fields, allowed, processed,
-                              need, res_v, res_i)
+                              pass_bm, passes, q_vecs, fields, allowed,
+                              processed, need, res_v, res_i)
+            self.dispatches += 1
             seeded = np.asarray(out["seeded"])
+            # the buffers donated into the call are dead now: rebind results
+            # before any break (a no-seed round leaves them bitwise
+            # unchanged, so this is still PR 1 semantics)
+            res_v, res_i = out["res_v"], out["res_i"]
             if not seeded.any():
                 break
-            res_v, res_i = out["res_v"], out["res_i"]
             processed, need = out["processed"], out["need"]
             stats["hops"] += np.asarray(out["hops"])
             stats["walks"] += seeded

@@ -31,14 +31,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.batched.bitmap import pack_bits
+from repro.core.batched.bitmap import n_words as _n_words
 from repro.kernels.ops import V_CAP
 
 NEG = jnp.float32(-3.4e38)
 MEMBER_CAP = 4096  # mirrors AnchorAtlas.cluster_members_matching's cap
-
-
-def _n_words(v_cap: int) -> int:
-    return -(-v_cap // 32)
 
 
 def pack_predicates(preds, *, max_clauses: int | None = None,
@@ -63,12 +61,9 @@ def pack_predicates(preds, *, max_clauses: int | None = None,
     return fields, allowed
 
 
-def pack_bitmap(mask: jax.Array) -> jax.Array:
-    """(Q, n) bool -> (Q, ceil(n/32)) u32, bit i of word w = point 32w+i."""
-    q, n = mask.shape
-    pad = (-n) % 32
-    m = jnp.pad(mask, ((0, 0), (0, pad))).reshape(q, -1, 32).astype(jnp.uint32)
-    return (m * (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))).sum(-1)
+# canonical packer lives in core/batched/bitmap.py; kept under the original
+# name for existing callers
+pack_bitmap = pack_bits
 
 
 def _excl_cumsum(x: jax.Array) -> jax.Array:
@@ -166,9 +161,10 @@ class DeviceAtlas:
         cluster (quota = remaining budget), consume every scanned cluster.
 
         q_vecs (Q, d); clause_tables from ``pack_predicates``; processed
-        (Q, K) bool; vectors (n, d); passes (Q, n) bool. Returns
-        (seeds (Q, n_seeds) i32 -1-padded, used (Q, K) bool to OR into
-        ``processed``).
+        (Q, K) bool; vectors (n, d); passes (Q, n) bool (the batched
+        engine unpacks its packed pass bitmap once per batch and hands the
+        dense form to every round). Returns (seeds (Q, n_seeds) i32
+        -1-padded, used (Q, K) bool to OR into ``processed``).
         """
         fields, allowed = clause_tables
         if allowed.shape[-1] != self.presence.shape[-1]:

@@ -74,6 +74,43 @@ def make_dataset(spec: SynthSpec = SynthSpec()) -> Dataset:
     return Dataset(vectors, metadata, field_names, vocab_sizes)
 
 
+def make_selectivity_dataset(selectivities=(0.5, 0.1, 0.02), *,
+                             n: int = 2400, d: int = 48,
+                             n_components: int = 16,
+                             seed: int = 7) -> Dataset:
+    """Corpus with *engineered* filter selectivities: field 0's code
+    marginals are pinned to ``selectivities`` (code i selects fraction
+    selectivities[i] of the corpus) and field 1 is component-correlated so
+    the anchor atlas has structure to index. Shared by the tier-1
+    selectivity-sweep fixture and the end-to-end search benchmark so the
+    parity tests validate the same distribution the benchmark measures."""
+    rng = np.random.default_rng(seed)
+    centers = normalize(rng.standard_normal((n_components, d)))
+    comp = rng.integers(0, n_components, n)
+    vectors = normalize(centers[comp] + 0.3 * rng.standard_normal((n, d)))
+    meta = np.empty((n, 2), np.int32)
+    meta[:, 0] = np.searchsorted(np.cumsum(selectivities), rng.random(n))
+    meta[:, 1] = (comp % 5).astype(np.int32)
+    return Dataset(vectors, meta, ["sel", "grp"],
+                   [len(selectivities) + 1, 5])
+
+
+def make_selectivity_queries(ds: Dataset, sel_code: int, n_queries: int, *,
+                             seed: int = 1) -> list[Query]:
+    """Queries near corpus points that pass ``field 0 == sel_code`` (so
+    recall is attainable), for a ``make_selectivity_dataset`` corpus."""
+    rng = np.random.default_rng(seed + sel_code)
+    pred = FilterPredicate.make({0: [sel_code]})
+    members = np.nonzero(ds.metadata[:, 0] == sel_code)[0]
+    sel = float(pred.mask(ds.metadata).mean())
+    out = []
+    for _ in range(n_queries):
+        src = members[rng.integers(members.size)]
+        qv = normalize(ds.vectors[src] + 0.15 * rng.standard_normal(ds.d))
+        out.append(Query(vector=qv, predicate=pred, selectivity=sel))
+    return out
+
+
 def make_queries(
     ds: Dataset,
     n_queries: int = 500,

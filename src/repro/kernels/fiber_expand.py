@@ -34,6 +34,59 @@ def _kernel(ids_ref, q_ref, row_ref, bm_ref, out_ref):
     out_ref[0, 0] = jnp.where(ok, sim, NEG)
 
 
+def _walk_kernel(ids_ref, q_ref, row_ref, bm_ref, out_ref, outp_ref):
+    qi = pl.program_id(0)
+    ri = pl.program_id(1)
+    nid = ids_ref[qi, ri]
+    qv = q_ref[...].astype(jnp.float32)           # (1, d)
+    row = row_ref[...].astype(jnp.float32)        # (1, d)
+    sim = jnp.sum(qv * row)
+    word = bm_ref[0, nid >> 5]
+    bit = ((word >> (nid & 31).astype(jnp.uint32)) & 1) == 1
+    valid = nid >= 0
+    out_ref[0, 0] = jnp.where(valid, sim, NEG)
+    outp_ref[0, 0] = jnp.where(valid & bit, sim, NEG)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fiber_expand_walk(q_vecs, corpus, ids, bitmap, *, interpret: bool = True):
+    """Walk-loop variant of ``fiber_expand``: ONE gather+dot per (q, r)
+    feeding two outputs — sims masked only by id validity (traversal
+    distances) and sims additionally masked by the packed pass bitmap
+    (result-queue candidates). The filter test is a bitmap word probe in
+    SMEM-adjacent VMEM, so filtered candidate distances never round-trip
+    through HBM as a separate bool load (ISSUE 2 tentpole).
+
+    q_vecs (Q, d); corpus (n, d); ids (Q, R) i32 (-1 pad);
+    bitmap (Q, n_words) uint32 -> (sims, sims_pass), each (Q, R) f32 with
+    -inf masking, matching ref.fiber_expand_walk."""
+    q, d = q_vecs.shape
+    r = ids.shape[1]
+    n_words = bitmap.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(q, r),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda qi, ri, ids_ref: (qi, 0)),
+            pl.BlockSpec(
+                (1, d),
+                lambda qi, ri, ids_ref: (jnp.maximum(ids_ref[qi, ri], 0), 0)),
+            pl.BlockSpec((1, n_words), lambda qi, ri, ids_ref: (qi, 0)),
+        ],
+        out_specs=[pl.BlockSpec((1, 1), lambda qi, ri, ids_ref: (qi, ri)),
+                   pl.BlockSpec((1, 1), lambda qi, ri, ids_ref: (qi, ri))],
+    )
+    out, outp = pl.pallas_call(
+        _walk_kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((q, r), jnp.float32),
+                   jax.ShapeDtypeStruct((q, r), jnp.float32)],
+        interpret=interpret,
+    )(ids, q_vecs, corpus, bitmap)
+    return (jnp.where(out <= NEG / 2, -jnp.inf, out),
+            jnp.where(outp <= NEG / 2, -jnp.inf, outp))
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def fiber_expand(q_vecs, corpus, ids, bitmap, *, interpret: bool = True):
     """q_vecs (Q, d); corpus (n, d); ids (Q, R) i32 (-1 pad);

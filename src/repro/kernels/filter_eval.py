@@ -39,6 +39,76 @@ def _kernel(meta_ref, fields_ref, allowed_ref, out_ref, *, n_clauses: int,
         jnp.uint32)
 
 
+def _batch_kernel(meta_ref, fields_ref, allowed_ref, out_ref, *,
+                  n_clauses: int, v_cap: int):
+    """Per-(query, corpus-tile) program: same iota-compare clause test as
+    ``_kernel`` but with this query's clause row selected by the grid."""
+    meta = meta_ref[...]                       # (Tn, F) int32
+    tn = meta.shape[0]
+    ok = jnp.ones((tn,), jnp.bool_)
+    viota = jax.lax.broadcasted_iota(jnp.int32, (tn, v_cap), 1)
+    for c in range(n_clauses):                 # static, small (<= 4 clauses)
+        f = fields_ref[0, c]
+        active = f >= 0
+        col = jax.lax.dynamic_index_in_dim(meta, jnp.maximum(f, 0), axis=1,
+                                           keepdims=False)   # (Tn,)
+        hit_tbl = allowed_ref[0, c, :] > 0                    # (v_cap,)
+        eq = viota == col[:, None]
+        clause_ok = jnp.any(eq & hit_tbl[None, :], axis=1)
+        clause_ok &= (col >= 0) & (col < v_cap)
+        ok = jnp.where(active, ok & clause_ok, ok)
+    bits = ok.reshape(tn // 32, 32).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jax.lax.broadcasted_iota(
+        jnp.uint32, (tn // 32, 32), 1))
+    out_ref[...] = jnp.sum(bits * weights, axis=1).reshape(1, tn // 32)
+
+
+@functools.partial(jax.jit, static_argnames=("tn", "interpret"))
+def filter_eval_batch(metadata, fields, allowed, *, tn: int = 1024,
+                      interpret: bool = True):
+    """Batched corpus sweep: metadata (n, F) i32; fields (Q, C) i32 (-1
+    inactive); allowed (Q, C, ceil(v_cap/32)) uint32 value bitmaps (the
+    ``pack_predicates`` clause-table format) -> (Q, ceil(n/32)) uint32.
+
+    The packed value bitmaps are expanded to the dense per-value tables the
+    iota-compare kernel consumes outside the kernel (tiny: Q*C*v_cap bytes);
+    the grid is (Q, corpus tiles). Pad bits beyond n are forced to 0 so the
+    output matches ``ref.filter_eval_batch`` bit-exactly even for
+    unconstrained predicates."""
+    n, F = metadata.shape
+    q_n, C = fields.shape
+    v_cap = allowed.shape[-1] * 32
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    dense = ((allowed[..., None] >> shifts) & jnp.uint32(1)).astype(jnp.uint8)
+    dense = dense.reshape(q_n, C, v_cap)
+    n_pad = (-n) % tn
+    # padded rows get code -1 -> fail all active clauses -> bit 0
+    meta_p = jnp.pad(metadata, ((0, n_pad), (0, 0)), constant_values=-1)
+    # queries on the fast grid axis: the (tn, F) metadata block index is
+    # then constant across the inner q sweep, so Pallas re-DMAs only the
+    # few-KB clause tables per step instead of the corpus tile per query
+    grid = ((n + n_pad) // tn, q_n)
+    out = pl.pallas_call(
+        functools.partial(_batch_kernel, n_clauses=C, v_cap=v_cap),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tn, F), lambda i, q: (i, 0)),
+            pl.BlockSpec((1, C), lambda i, q: (q, 0)),
+            pl.BlockSpec((1, C, v_cap), lambda i, q: (q, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tn // 32), lambda i, q: (q, i)),
+        out_shape=jax.ShapeDtypeStruct((q_n, (n + n_pad) // 32), jnp.uint32),
+        interpret=interpret,
+    )(meta_p, fields, dense)
+    w = (n + 31) // 32
+    out = out[:, :w]
+    tail = n - 32 * (w - 1)
+    if tail < 32:  # zero pad bits: an unconstrained predicate passes pad rows
+        out = out.at[:, w - 1].set(out[:, w - 1]
+                                   & jnp.uint32((1 << tail) - 1))
+    return out
+
+
 @functools.partial(jax.jit, static_argnames=("tn", "interpret"))
 def filter_eval(metadata, fields, allowed, *, tn: int = 1024,
                 interpret: bool = True):

@@ -12,7 +12,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.fiber_expand import fiber_expand as _fiber_expand
+from repro.kernels.fiber_expand import fiber_expand_walk as _fiber_expand_walk
 from repro.kernels.filter_eval import filter_eval as _filter_eval
+from repro.kernels.filter_eval import filter_eval_batch as _filter_eval_batch
 from repro.kernels.masked_cosine_topk import \
     masked_cosine_topk as _masked_cosine_topk
 
@@ -35,9 +37,19 @@ def fiber_expand(q_vecs, corpus, ids, bitmap):
                          interpret=_interpret())
 
 
+def fiber_expand_walk(q_vecs, corpus, ids, bitmap):
+    return _fiber_expand_walk(q_vecs, corpus, ids, bitmap,
+                              interpret=_interpret())
+
+
 def filter_eval(metadata, fields, allowed, *, tn: int = 1024):
     return _filter_eval(metadata, fields, allowed, tn=tn,
                         interpret=_interpret())
+
+
+def filter_eval_batch(metadata, fields, allowed, *, tn: int = 1024):
+    return _filter_eval_batch(metadata, fields, allowed, tn=tn,
+                              interpret=_interpret())
 
 
 def predicate_tables(pred, n_fields: int,

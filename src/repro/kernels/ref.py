@@ -5,8 +5,15 @@ Semantics contract shared by kernel and oracle:
   column >= n) score -inf; per-query top-k (sims desc, ids).
 * fiber_expand: sims[q, r] = q_vec[q] . X[ids[q, r]] when id >= 0 AND the
   id's filter bit is set, else -inf.
+* fiber_expand_walk: same gather+dot but TWO outputs per (q, r) — sims
+  masked only by id validity (the walk's traversal distances) and sims
+  additionally masked by the filter bit (the result-queue candidates) —
+  so the hot loop never loads a separate bool pass mask.
 * filter_eval: packed uint32 bitmap of conjunctive predicate over int codes;
   code -1 (unpopulated) fails any clause on that field.
+* filter_eval_batch: filter_eval for Q queries at once, consuming the
+  pack_predicates clause tables (fields (Q, C) i32; allowed (Q, C, Wv)
+  uint32 value bitmaps) -> (Q, ceil(n/32)) uint32.
 """
 from __future__ import annotations
 
@@ -56,6 +63,21 @@ def fiber_expand(q_vecs: jax.Array, corpus: jax.Array, ids: jax.Array,
     return jnp.where(ok, sims, NEG)
 
 
+def fiber_expand_walk(q_vecs: jax.Array, corpus: jax.Array, ids: jax.Array,
+                      bitmap: jax.Array):
+    """q_vecs (Q, d); corpus (n, d); ids (Q, R) i32 (-1 pad);
+    bitmap (Q, n_words) uint32. Returns (sims, sims_pass), both (Q, R) f32:
+    ``sims`` is -inf only for padded ids, ``sims_pass`` additionally -inf
+    where the id's filter bit is 0."""
+    safe = jnp.maximum(ids, 0)
+    rows = corpus[safe].astype(jnp.float32)            # (Q, R, d)
+    sims = jnp.einsum("qrd,qd->qr", rows, q_vecs.astype(jnp.float32))
+    words = jnp.take_along_axis(bitmap, (safe >> 5).astype(jnp.int32), axis=1)
+    bits = ((words >> (safe & 31).astype(jnp.uint32)) & 1).astype(bool)
+    valid = ids >= 0
+    return jnp.where(valid, sims, NEG), jnp.where(valid & bits, sims, NEG)
+
+
 def filter_eval(metadata: jax.Array, fields: jax.Array, allowed: jax.Array):
     """metadata (n, F) i32; fields (C,) i32 (-1 = inactive clause);
     allowed (C, V_cap) uint8 (1 = value allowed). Returns (ceil(n/32),)
@@ -76,3 +98,29 @@ def filter_eval(metadata: jax.Array, fields: jax.Array, allowed: jax.Array):
     bits = okp.reshape(-1, 32).astype(jnp.uint32)
     weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
     return (bits * weights).sum(axis=1).astype(jnp.uint32)
+
+
+def filter_eval_batch(metadata: jax.Array, fields: jax.Array,
+                      allowed: jax.Array):
+    """metadata (n, F) i32; fields (Q, C) i32 (-1 = inactive clause);
+    allowed (Q, C, ceil(v_cap/32)) uint32 value bitmaps (the
+    ``pack_predicates`` clause-table format). Returns (Q, ceil(n/32))
+    uint32 packed pass bitmaps; pad bits beyond n are 0."""
+    n = metadata.shape[0]
+    q_n, n_clauses = fields.shape
+    v_cap = allowed.shape[-1] * 32
+    ok = jnp.ones((q_n, n), bool)
+    for c in range(n_clauses):
+        f = fields[:, c]                                        # (Q,)
+        vals = metadata[:, jnp.maximum(f, 0)].T                 # (Q, n)
+        safe = jnp.clip(vals, 0, v_cap - 1)
+        words = jnp.take_along_axis(allowed[:, c, :],
+                                    (safe >> 5).astype(jnp.int32), axis=1)
+        bit = ((words >> (safe & 31).astype(jnp.uint32)) & 1).astype(bool)
+        clause_ok = bit & (vals >= 0) & (vals < v_cap)
+        ok = jnp.where((f >= 0)[:, None], ok & clause_ok, ok)
+    pad = (-n) % 32
+    okp = jnp.pad(ok, ((0, 0), (0, pad)))
+    bits = okp.reshape(q_n, -1, 32).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    return (bits * weights).sum(axis=-1).astype(jnp.uint32)

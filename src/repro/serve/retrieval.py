@@ -63,12 +63,27 @@ class RetrievalService:
         return self._engine
 
     def query_batch(self, vectors: np.ndarray,
-                    predicates: list[FilterPredicate]):
-        """Batched filtered retrieval: all queries advance in lockstep on
-        device. Returns (list of id arrays, engine stats dict)."""
+                    predicates: list[FilterPredicate], *,
+                    bucket: bool = True):
+        """Batched filtered retrieval: the whole batch is ONE device
+        dispatch (fused predicate eval + restart loop + lockstep walks).
+
+        With ``bucket`` (default), the batch is padded to the next
+        power-of-two with inert dummy queries (zero vector, match-nothing
+        predicate: they never seed, walk, or affect the loop) so a serving
+        process compiles one program per bucket instead of one per arrival
+        batch size; results are sliced back to the real queries. Returns
+        (list of id arrays, engine stats dict)."""
         queries = [Query(vector=v, predicate=p)
                    for v, p in zip(normalize(vectors), predicates)]
-        return self.engine().search(queries)
+        q_real = len(queries)
+        if bucket and q_real > 1:
+            target = 1 << (q_real - 1).bit_length()
+            dummy = Query(vector=np.zeros_like(queries[0].vector),
+                          predicate=FilterPredicate.make({0: []}))
+            queries = queries + [dummy] * (target - q_real)
+        ids, stats = self.engine().search(queries)
+        return ids[:q_real], {k: v[:q_real] for k, v in stats.items()}
 
 
 class EncodedRetriever:

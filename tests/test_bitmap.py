@@ -1,0 +1,87 @@
+"""Packed uint32 bitmap helpers vs bool-mask oracles (property tests).
+
+The lockstep walk's entire per-point state rides on these ops, so each is
+checked against the obvious dense-bool computation, including the nasty
+cases: duplicate indices in one scatter, already-set bits, negative (pad)
+indices, and n not a multiple of 32.
+"""
+import numpy as np
+import jax.numpy as jnp
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container without hypothesis: deterministic shim
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.core.batched import bitmap
+from repro.core.batched.bitmap import (n_words, pack_bits, popcount,
+                                       set_bits, unpack_bits)
+
+
+def _rand_mask(rng, q, n):
+    return rng.random((q, n)) < rng.random()
+
+
+@given(st.integers(1, 5), st.integers(1, 200), st.integers(0, 1000))
+@settings(max_examples=25, deadline=None)
+def test_pack_unpack_roundtrip(q, n, seed):
+    rng = np.random.default_rng(seed)
+    mask = _rand_mask(rng, q, n)
+    bm = pack_bits(jnp.asarray(mask))
+    assert bm.shape == (q, n_words(n)) and bm.dtype == jnp.uint32
+    np.testing.assert_array_equal(np.asarray(unpack_bits(bm, n)), mask)
+
+
+@given(st.integers(1, 4), st.integers(1, 150), st.integers(0, 1000))
+@settings(max_examples=25, deadline=None)
+def test_test_bits_vs_bool_oracle(q, n, seed):
+    rng = np.random.default_rng(seed)
+    mask = _rand_mask(rng, q, n)
+    idx = rng.integers(-1, n, (q, 13)).astype(np.int32)
+    got = np.asarray(bitmap.test_bits(pack_bits(jnp.asarray(mask)),
+                                      jnp.asarray(idx)))
+    want = np.where(idx >= 0,
+                    mask[np.arange(q)[:, None], np.maximum(idx, 0)], False)
+    np.testing.assert_array_equal(got, want)
+
+
+@given(st.integers(1, 4), st.integers(1, 150), st.integers(0, 1000))
+@settings(max_examples=25, deadline=None)
+def test_set_bits_vs_bool_oracle(q, n, seed):
+    """Scatter-OR == dense bool scatter, with duplicate indices (forced by
+    concatenating a slice of idx onto itself), off flags, pad indices, and
+    bits that are already set."""
+    rng = np.random.default_rng(seed)
+    mask = _rand_mask(rng, q, n)
+    m = 11
+    idx = rng.integers(-1, n, (q, m)).astype(np.int32)
+    idx = np.concatenate([idx, idx[:, : m // 2 + 1]], axis=1)
+    on = rng.random(idx.shape) < 0.7
+    got = set_bits(pack_bits(jnp.asarray(mask)), jnp.asarray(idx),
+                   jnp.asarray(on))
+    want = mask.copy()
+    for qi in range(q):
+        for j in range(idx.shape[1]):
+            if idx[qi, j] >= 0 and on[qi, j]:
+                want[qi, idx[qi, j]] = True
+    np.testing.assert_array_equal(np.asarray(unpack_bits(got, n)), want)
+
+
+@given(st.integers(1, 4), st.integers(1, 300), st.integers(0, 1000))
+@settings(max_examples=25, deadline=None)
+def test_popcount_vs_sum(q, n, seed):
+    rng = np.random.default_rng(seed)
+    mask = _rand_mask(rng, q, n)
+    got = np.asarray(popcount(pack_bits(jnp.asarray(mask))))
+    np.testing.assert_array_equal(got, mask.sum(axis=1).astype(np.int32))
+
+
+def test_set_bits_is_idempotent_or():
+    """Setting the same bits twice changes nothing (add == or exactly)."""
+    rng = np.random.default_rng(3)
+    mask = _rand_mask(rng, 3, 90)
+    idx = rng.integers(0, 90, (3, 20)).astype(np.int32)
+    on = np.ones((3, 20), bool)
+    bm = pack_bits(jnp.asarray(mask))
+    once = set_bits(bm, jnp.asarray(idx), jnp.asarray(on))
+    twice = set_bits(once, jnp.asarray(idx), jnp.asarray(on))
+    np.testing.assert_array_equal(np.asarray(once), np.asarray(twice))

@@ -8,12 +8,11 @@ import pytest
 from repro.core.atlas import AnchorAtlas
 from repro.core.batched.engine import BatchedEngine, BatchedParams
 from repro.core.device_atlas import pack_predicates
-from repro.core.graph import build_alpha_knn
-from repro.core.search import FiberIndex, SearchParams, run_queries
+from repro.core.search import SearchParams, run_queries
 from repro.core.types import FilterPredicate, Query, normalize
-from repro.data.ground_truth import attach_ground_truth, recall_at_k
+from repro.data.ground_truth import recall_at_k
 
-SELECTIVITIES = (0.5, 0.1, 0.02)
+from conftest import SELECTIVITIES
 
 
 def _host_round(atlas, q, processed, vectors):
@@ -81,36 +80,8 @@ def test_batch_seed_parity(small_ds, small_atlas, small_queries):
         proc = proc | jnp.asarray(used_d)
 
 
-@pytest.fixture(scope="module")
-def sel_sweep():
-    """Corpus + queries with engineered filter selectivities ~{0.5,0.1,0.02}:
-    field 0's code marginals are pinned; field 1 is component-correlated so
-    the atlas has structure to index."""
-    rng = np.random.default_rng(7)
-    C, n, d = 16, 2400, 48
-    centers = normalize(rng.standard_normal((C, d)))
-    comp = rng.integers(0, C, n)
-    vectors = normalize(centers[comp] + 0.3 * rng.standard_normal((n, d)))
-    meta = np.empty((n, 2), np.int32)
-    cuts = np.cumsum(SELECTIVITIES)
-    meta[:, 0] = np.searchsorted(cuts, rng.random(n))
-    meta[:, 1] = (comp % 5).astype(np.int32)
-    from repro.core.types import Dataset
-    ds = Dataset(vectors, meta, ["sel", "grp"], [4, 5])
-    graph = build_alpha_knn(ds.vectors, k=16, r_max=48, alpha=1.2)
-    atlas = AnchorAtlas.build(ds, seed=0)
-    index = FiberIndex(ds.vectors, ds.metadata, graph, atlas)
-    queries = []
-    for v, _target in enumerate(SELECTIVITIES):
-        pred = FilterPredicate.make({0: [v]})
-        members = np.nonzero(meta[:, 0] == v)[0]
-        for j in range(12):
-            src = members[rng.integers(members.size)]
-            qv = normalize(ds.vectors[src] + 0.15 * rng.standard_normal(d))
-            queries.append(Query(vector=qv, predicate=pred,
-                                 selectivity=float(pred.mask(meta).mean())))
-    attach_ground_truth(ds, queries, k=10)
-    return ds, index, queries
+# (the engineered-selectivity ``sel_sweep`` fixture lives in conftest.py,
+# shared with the fused single-dispatch parity tests)
 
 
 def test_engineered_selectivities(sel_sweep):

@@ -103,3 +103,53 @@ def test_filter_eval_vs_ref_oracle():
     out_r = ref.filter_eval(jnp.asarray(meta), jnp.asarray(fields),
                             jnp.asarray(allowed))
     np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+
+
+@pytest.mark.parametrize("n,d,Q,R", [(64, 16, 2, 5), (500, 64, 7, 24),
+                                     (1000, 128, 3, 48)])
+def test_fiber_expand_walk_sweep(n, d, Q, R):
+    """The walk-loop kernel: its first output must equal plain gather+dot
+    masked by id validity only, its second the fully filtered fiber_expand."""
+    corpus, queries, bitmap = _mk(n, d, Q, seed=R + 1)
+    rng = np.random.default_rng(R + 1)
+    ids = rng.integers(-1, n, (Q, R)).astype(np.int32)
+    args = (jnp.asarray(queries), jnp.asarray(corpus), jnp.asarray(ids),
+            jnp.asarray(bitmap))
+    s_k, p_k = ops.fiber_expand_walk(*args)
+    s_r, p_r = ref.fiber_expand_walk(*args)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(p_k), np.asarray(p_r),
+                               rtol=1e-4, atol=1e-4)
+    # the filtered output is exactly fiber_expand
+    e_r = ref.fiber_expand(*args)
+    np.testing.assert_allclose(np.asarray(p_r), np.asarray(e_r),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(10, 300), st.integers(1, 3), st.integers(0, 100))
+@settings(max_examples=10, deadline=None)
+def test_filter_eval_batch_matches_core_mask(n, n_clauses, seed):
+    """Batched kernel == oracle == per-query FilterPredicate.mask, from the
+    pack_predicates clause tables (the engine's single-dispatch path)."""
+    from repro.core.device_atlas import pack_predicates
+
+    rng = np.random.default_rng(seed)
+    F = 6
+    meta = rng.integers(-1, 40, (n, F)).astype(np.int32)
+    preds = []
+    for _ in range(3):
+        clauses = {int(f): rng.integers(0, 40, rng.integers(1, 4)).tolist()
+                   for f in rng.choice(F, n_clauses, replace=False)}
+        preds.append(FilterPredicate.make(clauses))
+    preds.append(FilterPredicate.make({}))  # unconstrained: pad bits stay 0
+    f_np, a_np = pack_predicates(preds, v_cap=64)
+    out_k = np.asarray(ops.filter_eval_batch(
+        jnp.asarray(meta), jnp.asarray(f_np), jnp.asarray(a_np), tn=64))
+    out_r = np.asarray(ref.filter_eval_batch(
+        jnp.asarray(meta), jnp.asarray(f_np), jnp.asarray(a_np)))
+    np.testing.assert_array_equal(out_k, out_r)
+    for qi, pred in enumerate(preds):
+        unpacked = np.unpackbits(out_k[qi].view(np.uint8),
+                                 bitorder="little")[:n]
+        np.testing.assert_array_equal(unpacked.astype(bool), pred.mask(meta))
