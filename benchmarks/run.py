@@ -93,6 +93,11 @@ def smoke() -> None:
     assert 0.0 <= cell["recall"] <= 1.0
     _csv("search/smoke", 1e6 / cell["qps"],  # us/query, same unit as main()
          f"recall={cell['recall']:.3f}")
+    sh = next(v for k, v in res.items() if k.startswith("sharded"))
+    assert sh["dispatches_per_batch"] == 1, sh
+    assert 0.0 <= sh["recall"] <= 1.0
+    _csv("search/smoke_sharded", 1e6 / sh["qps"],
+         f"recall={sh['recall']:.3f} shards={sh['n_shards']}")
     print(f"[smoke search bench {time.time()-t0:.0f}s] OK")
 
 

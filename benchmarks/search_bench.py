@@ -8,8 +8,12 @@ serving perf trajectory. Each cell also records the walk mask-state footprint
 (3 packed uint32 bitmaps: visited / in-results / pass = 3 * Q * ceil(n/32)
 * 4 bytes) so regressions back to dense (Q, n) bool masks are visible.
 
-``--smoke`` (or smoke=True) runs a tiny corpus with 2 queries: the CI
-entrypoint guard, not a measurement.
+``sharded_search_bench`` adds rows for the mesh-sharded engine
+(``sharded<S>/qN/selX``): same corpus recipe, partitioned over the ``data``
+axis, one shard_map dispatch per batch.
+
+``--smoke`` (or smoke=True) runs a tiny corpus with 2 queries (fused +
+sharded paths): the CI entrypoint guard, not a measurement.
 """
 from __future__ import annotations
 
@@ -81,6 +85,64 @@ def search_bench(batch_sizes=BATCH_SIZES, selectivities=SELECTIVITIES, *,
     return out
 
 
+def sharded_search_bench(batch_sizes=(64,), selectivities=SELECTIVITIES, *,
+                         n: int = 8000, d: int = 64, k: int = 10,
+                         reps: int = 20, graph_k: int = 16, seed: int = 7,
+                         n_shards: int | None = None) -> dict:
+    """Sharded engine rows (DESIGN.md §7): same corpus recipe as
+    ``search_bench``, partitioned over the mesh ``data`` axis. Defaults to
+    the largest power-of-two shard count the session's devices allow (run
+    under ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` on CPU to
+    get a real multi-shard row). Keys look like ``sharded4/q64/sel0.1``."""
+    import jax
+
+    from repro.core.batched.sharded import ShardedEngine, build_sharded_index
+    from repro.launch.mesh import make_local_mesh
+
+    n_dev = len(jax.devices())
+    s = n_shards or min(8, 1 << (n_dev.bit_length() - 1))
+    ds = make_selectivity_dataset(selectivities, n=n, d=d, n_components=24,
+                                  seed=seed)
+    sidx = build_sharded_index(ds.vectors, ds.metadata, s, graph_k=graph_k,
+                               r_max=3 * graph_k, alpha=1.2)
+    mesh = make_local_mesh(data=s, model=1)
+    eng = ShardedEngine(sidx, mesh, BatchedParams(k=k, beam_width=4))
+    m_words = (sidx.rows_per_shard + 31) // 32
+    out: dict = {}
+    q_max = max(batch_sizes)
+    pools = {}
+    for si, sel in enumerate(selectivities):
+        qs = make_selectivity_queries(ds, si, q_max)
+        attach_ground_truth(ds, qs, k=k)
+        pools[sel] = qs
+    for q_n in batch_sizes:
+        for sel in selectivities:
+            batch = pools[sel][:q_n]
+            d0 = eng.dispatches
+            ids, stats = eng.search(batch)  # compile at this batch shape
+            disp = eng.dispatches - d0
+            lat = []
+            for _ in range(reps):
+                t0 = time.time()
+                ids, stats = eng.search(batch)
+                lat.append(time.time() - t0)
+            lat_ms = np.asarray(lat) * 1e3
+            rec = float(np.mean([recall_at_k(np.asarray(i), q.gt_ids)
+                                 for i, q in zip(ids, batch)]))
+            out[f"sharded{s}/q{q_n}/sel{sel}"] = {
+                "qps": q_n * reps / float(np.sum(lat)),
+                "p50_ms": float(np.percentile(lat_ms, 50)),
+                "p99_ms": float(np.percentile(lat_ms, 99)),
+                "recall": rec,
+                "mean_walks": float(np.mean(stats["walks"])),
+                "mean_hops": float(np.mean(stats["hops"])),
+                "n_shards": s,
+                "mask_state_bytes_per_shard": 3 * q_n * m_words * 4,
+                "dispatches_per_batch": disp,
+            }
+    return out
+
+
 def write_baseline(results: dict, path: str = OUT_PATH) -> None:
     parent = os.path.dirname(path)
     if parent:
@@ -93,8 +155,13 @@ def main(smoke: bool = False) -> dict:
     if smoke:
         results = search_bench(batch_sizes=(2,), selectivities=(0.5,),
                                n=600, d=16, k=5, reps=1, graph_k=8)
+        # exercise the shard_map path too (S=1 on a single-device session)
+        results.update(sharded_search_bench(
+            batch_sizes=(2,), selectivities=(0.5,), n=600, d=16, k=5,
+            reps=1, graph_k=8))
     else:
         results = search_bench()
+        results.update(sharded_search_bench())
         write_baseline(results)
     return results
 

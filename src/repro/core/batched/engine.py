@@ -284,16 +284,26 @@ def atlas_round(datlas: DeviceAtlas, vectors, adjacency, pass_bm, passes,
 
 
 def search_batch(datlas: DeviceAtlas, vectors, adjacency, metadata, q_vecs,
-                 fields, allowed, p: BatchedParams, seed_backend: str):
+                 fields, allowed, p: BatchedParams, seed_backend: str,
+                 valid_bm=None):
     """A whole filtered search batch as ONE device program: batched
     predicate evaluation, then a ``lax.while_loop`` over restart rounds
     (each round = ``atlas_round``). "Anyone seeded?" / "anyone still short
     of k?" are device predicates in the loop condition; per-round walks and
     hops accumulate in fixed-shape carries. Mirrors the PR 1 host round
     loop exactly: a round where nobody seeded is discarded wholesale (it
-    cannot change results) and ends the loop."""
+    cannot change results) and ends the loop.
+
+    ``valid_bm`` (optional, (ceil(n/32),) uint32) marks real corpus rows:
+    rows with a 0 bit fail every predicate. Sharded indexes pad each shard
+    to a common row count and use this to keep pad rows (zero vector,
+    metadata -1) out of every pass set — including the unconstrained
+    predicate, which an empty clause table would otherwise let through.
+    """
     Q = q_vecs.shape[0]
     pass_bm = _eval_passes(metadata, fields, allowed)
+    if valid_bm is not None:
+        pass_bm = pass_bm & valid_bm[None, :]
     # the dense unpack feeds only selection math and is round-invariant:
     # hoist it out of the while_loop so each round reuses one buffer
     passes = unpack_bits(pass_bm, vectors.shape[0])
@@ -335,6 +345,27 @@ def search_batch(datlas: DeviceAtlas, vectors, adjacency, metadata, q_vecs,
                 walks=out["walks"])
 
 
+def clause_dim(n_clauses: int) -> int:
+    """Compiled clause-table width for a batch whose widest predicate has
+    ``n_clauses`` clauses: at least MAX_CLAUSES (so common small batches
+    share one program), then the next power of two (so two different wide
+    widths also share instead of silently recompiling per distinct width)."""
+    if n_clauses <= MAX_CLAUSES:
+        return MAX_CLAUSES
+    return 1 << (n_clauses - 1).bit_length()
+
+
+def pack_query_batch(queries: list[Query], *, v_cap: int):
+    """Host-side query pack shared by the single-device and sharded
+    engines: (Q, d) vector stack + clause tables with the clause dimension
+    bucketed by ``clause_dim``."""
+    q_vecs = jnp.asarray(np.stack([q.vector for q in queries]))
+    n_cl = max((q.predicate.n_clauses for q in queries), default=0)
+    f_np, a_np = pack_predicates([q.predicate for q in queries],
+                                 max_clauses=clause_dim(n_cl), v_cap=v_cap)
+    return q_vecs, jnp.asarray(f_np), jnp.asarray(a_np)
+
+
 class BatchedEngine:
     """Single-dispatch batched search over a device-resident index.
 
@@ -369,15 +400,7 @@ class BatchedEngine:
         self.dispatches = 0
 
     def _pack_queries(self, queries: list[Query]):
-        q_vecs = jnp.asarray(np.stack([q.vector for q in queries]))
-        # pin the clause dimension to at least MAX_CLAUSES so batches with
-        # differing (common, small) clause counts share one compiled
-        # program; rarer wider predicates still get an exact fit
-        n_cl = max((q.predicate.n_clauses for q in queries), default=0)
-        f_np, a_np = pack_predicates([q.predicate for q in queries],
-                                     max_clauses=max(MAX_CLAUSES, n_cl),
-                                     v_cap=self.datlas.v_cap)
-        return q_vecs, jnp.asarray(f_np), jnp.asarray(a_np)
+        return pack_query_batch(queries, v_cap=self.datlas.v_cap)
 
     def search(self, queries: list[Query], seed: int = 0):
         """Filtered top-k for a batch: one device dispatch, one host sync.

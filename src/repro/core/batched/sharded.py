@@ -1,0 +1,249 @@
+"""Sharded fused search over the mesh ``data`` axis (DESIGN.md §7).
+
+The single-device ``BatchedEngine`` needs the whole corpus on one chip —
+dense (n, d) vectors, (n, R) adjacency, the packed atlas. ``ShardedEngine``
+partitions the corpus row-wise into S = mesh.shape["data"] contiguous
+shards (vectors, metadata, a shard-local α-kNN subgraph, a per-shard
+``DeviceAtlas``, and packed row-validity bitmaps for the pad rows) and runs
+the SAME fused ``search_batch`` program on every shard under ``shard_map``
+with queries replicated. Each shard emits its local top-k in shard-local
+ids; a gather through the shard's global-id map, one ``lax.all_gather``
+over the data axis, and a top-k merge yield the global result — still ONE
+device dispatch and ONE host sync per batch.
+
+The cross-shard merge is exact: every point lives on exactly one shard and
+its distance is a pure function of (q, point), so the k smallest of the
+union of per-shard top-ks equals the top-k of the union of the per-shard
+result sets (the cross-round dedup argument of DESIGN.md §3, applied across
+shards). ``search_reference`` runs the identical per-shard programs one at
+a time on the default device with the identical merge — the single-device
+fused baseline the mesh dispatch must match bit-for-bit (tested).
+
+Corpus capacity scales linearly with device count; each shard walks a
+subgraph of ~n/S points, so per-device memory and per-hop gather traffic
+drop by S while the batch keeps its one-dispatch property.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.atlas import AnchorAtlas
+from repro.core.batched.bitmap import n_words, pack_bits
+from repro.core.batched.engine import (INF, BatchedParams, pack_query_batch,
+                                       search_batch)
+from repro.core.device_atlas import DeviceAtlas, stack_atlases
+from repro.core.graph import build_shard_graphs, stack_adjacency
+from repro.core.types import Dataset, Query
+from repro.kernels.ops import V_CAP
+from repro.launch.mesh import index_axis_size
+from repro.launch.shardings import index_shardings
+from repro.models.common import shard_map
+
+
+@dataclasses.dataclass
+class ShardedIndex:
+    """Host-built, device-ready row partition of a filtered-ANN corpus.
+
+    Every array carries a leading shard dim S; shard s owns a balanced
+    contiguous row block (``graph.shard_bounds``) padded to the common row
+    count m = ceil(n/S). Adjacency and atlas ids are shard-LOCAL;
+    ``global_ids`` maps them back (-1 = pad).
+    """
+
+    vectors: jax.Array      # (S, m, d) f32, zero on pad rows
+    adjacency: jax.Array    # (S, m, R) i32 shard-local ids, -1 padded
+    metadata: jax.Array     # (S, m, F) i32, -1 on pad rows
+    global_ids: jax.Array   # (S, m) i32 local row -> global id, -1 = pad
+    valid_bm: jax.Array     # (S, ceil(m/32)) u32 packed row-validity
+    datlas: DeviceAtlas     # per-shard atlases, leaves stacked to (S, ...)
+    n: int                  # real (unpadded) corpus size
+
+    @property
+    def n_shards(self) -> int:
+        return self.vectors.shape[0]
+
+    @property
+    def rows_per_shard(self) -> int:
+        return self.vectors.shape[1]
+
+
+def build_sharded_index(vectors: np.ndarray, metadata: np.ndarray,
+                        n_shards: int, *, graph_k: int = 32,
+                        r_max: int = 96, alpha: float = 1.2,
+                        n_clusters: int | None = None,
+                        v_cap: int | None = None,
+                        seed: int = 0) -> ShardedIndex:
+    """Partition a corpus into ``n_shards`` row blocks and build each
+    shard's subgraph + atlas. All shards share one n_clusters and one v_cap
+    (the atlas leaves must stack to fixed shapes for ``shard_map``), and
+    every shard is padded to m = ceil(n / S) rows; pad rows are killed by
+    the row-validity bitmap, never by luck of the predicate."""
+    vectors = np.asarray(vectors, np.float32)
+    metadata = np.asarray(metadata, np.int32)
+    n, d = vectors.shape
+    f_count = metadata.shape[1]
+    graphs, bounds = build_shard_graphs(vectors, n_shards, k=graph_k,
+                                        r_max=r_max, alpha=alpha)
+    m = -(-n // n_shards)
+    min_real = min(hi - lo for lo, hi in bounds)
+    if n_clusters is None:
+        n_clusters = int(np.ceil(np.sqrt(m)))
+    n_clusters = min(n_clusters, min_real)
+    if v_cap is None:
+        vmax = int(metadata.max()) if metadata.size else -1
+        v_cap = max(V_CAP, 32 * n_words(vmax + 1))
+
+    vec = np.zeros((n_shards, m, d), np.float32)
+    meta = np.full((n_shards, m, f_count), -1, np.int32)
+    gids = np.full((n_shards, m), -1, np.int32)
+    valid = np.zeros((n_shards, m), bool)
+    field_names = [f"f{i}" for i in range(f_count)]
+    atlases = []
+    for s, (lo, hi) in enumerate(bounds):
+        n_s = hi - lo
+        vec[s, :n_s] = vectors[lo:hi]
+        meta[s, :n_s] = metadata[lo:hi]
+        gids[s, :n_s] = np.arange(lo, hi, dtype=np.int32)
+        valid[s, :n_s] = True
+        ds_s = Dataset(vectors[lo:hi], metadata[lo:hi], field_names,
+                       [v_cap] * f_count)
+        atlas = AnchorAtlas.build(ds_s, n_clusters=n_clusters, seed=seed)
+        atlases.append(
+            DeviceAtlas.from_atlas(atlas, v_cap=v_cap).pad_rows(m))
+    return ShardedIndex(
+        vectors=jnp.asarray(vec),
+        adjacency=jnp.asarray(stack_adjacency(graphs, m)),
+        metadata=jnp.asarray(meta),
+        global_ids=jnp.asarray(gids),
+        valid_bm=pack_bits(jnp.asarray(valid)),
+        datlas=stack_atlases(atlases), n=n)
+
+
+def merge_topk(all_v: jax.Array, all_i: jax.Array, k: int):
+    """Exact cross-shard merge: (S, Q, k) per-shard top-ks -> (Q, k)
+    global top-k. Ids are globally unique (a point lives on one shard), so
+    no dedup is needed; the value of a result is a pure function of
+    (q, point), so keeping the k smallest of the union is exact. Ties
+    break shard-major (lax.top_k picks the lowest flattened index), which
+    both the mesh and reference paths share."""
+    s, q_n, k_in = all_v.shape
+    cat_v = jnp.transpose(all_v, (1, 0, 2)).reshape(q_n, s * k_in)
+    cat_i = jnp.transpose(all_i, (1, 0, 2)).reshape(q_n, s * k_in)
+    top, sel = jax.lax.top_k(-cat_v, k)
+    return -top, jnp.take_along_axis(cat_i, sel, axis=1)
+
+
+class ShardedEngine:
+    """One-dispatch filtered search over a row-sharded index.
+
+    ``search`` runs the fused per-shard ``search_batch`` under ``shard_map``
+    (queries replicated, index partitioned over the ``data`` axis), maps
+    local result ids to global ids, all-gathers the per-shard top-ks and
+    merges them on device — one jitted call, one host sync, mirroring
+    ``BatchedEngine.search``'s contract. ``dispatches`` counts compiled
+    invocations so tests can assert the one-dispatch property.
+    """
+
+    def __init__(self, sindex: ShardedIndex, mesh,
+                 params: BatchedParams = BatchedParams(),
+                 seed_backend: str = "topk", axis: str = "data"):
+        s = sindex.n_shards
+        if index_axis_size(mesh, axis) != s:
+            raise ValueError(
+                f"index has {s} shards but mesh axis {axis!r} spans "
+                f"{index_axis_size(mesh, axis)} devices")
+        self.mesh, self.axis, self.p = mesh, axis, params
+        self._seed_backend = seed_backend
+        sh = index_shardings(mesh, axis)
+        put = functools.partial(jax.device_put, device=sh["rows"])
+        self.vectors = put(sindex.vectors)
+        self.adjacency = put(sindex.adjacency)
+        self.metadata = put(sindex.metadata)
+        self.global_ids = put(sindex.global_ids)
+        self.valid_bm = put(sindex.valid_bm)
+        datlas = jax.tree.map(put, sindex.datlas)
+        self._leaves, self._tdef = jax.tree_util.tree_flatten(datlas)
+        self.v_cap = sindex.datlas.v_cap
+        self.n, self.n_shards = sindex.n, s
+        self._search = self._build_program()
+        self._ref = jax.jit(
+            lambda datlas, vec, adj, meta, vbm, qv, f, a: search_batch(
+                datlas, vec, adj, meta, qv, f, a, params, seed_backend,
+                valid_bm=vbm))
+        self.dispatches = 0
+
+    def _build_program(self):
+        axis, p, sb = self.axis, self.p, self._seed_backend
+        nl, tdef = len(self._leaves), self._tdef
+
+        def fn(*args):
+            leaves, rest = args[:nl], args[nl:]
+            vectors, adjacency, metadata, global_ids, valid_bm = rest[:5]
+            q_vecs, fields, allowed = rest[5:]
+            datlas = jax.tree_util.tree_unflatten(
+                tdef, [l[0] for l in leaves])
+            out = search_batch(datlas, vectors[0], adjacency[0], metadata[0],
+                               q_vecs, fields, allowed, p, sb,
+                               valid_bm=valid_bm[0])
+            gids = jnp.where(out["res_i"] >= 0,
+                             global_ids[0][jnp.maximum(out["res_i"], 0)], -1)
+            all_v = jax.lax.all_gather(out["res_v"], axis)
+            all_i = jax.lax.all_gather(gids, axis)
+            res_v, res_i = merge_topk(all_v, all_i, p.k)
+            return dict(res_v=res_v, res_i=res_i,
+                        hops=jax.lax.psum(out["hops"], axis),
+                        walks=jax.lax.psum(out["walks"], axis))
+
+        in_specs = tuple([P(axis)] * (nl + 5) + [P(), P(), P()])
+        return jax.jit(shard_map(fn, mesh=self.mesh, in_specs=in_specs,
+                                 out_specs=P(), check_vma=False))
+
+    def _fetch(self, out, q_n: int):
+        host = jax.device_get(out)  # the batch's single host sync
+        res_v, res_i = host["res_v"], host["res_i"]
+        ids = [res_i[i][res_v[i] < INF / 2] for i in range(q_n)]
+        return ids, {"walks": host["walks"].astype(np.int32),
+                     "hops": host["hops"].astype(np.int64)}
+
+    def search(self, queries: list[Query], seed: int = 0):
+        """Filtered top-k for a batch across all shards: one device
+        dispatch, one host sync. Stats sum device work over shards (every
+        shard walks every query)."""
+        del seed
+        q_vecs, fields, allowed = pack_query_batch(queries, v_cap=self.v_cap)
+        out = self._search(*self._leaves, self.vectors, self.adjacency,
+                           self.metadata, self.global_ids, self.valid_bm,
+                           q_vecs, fields, allowed)
+        self.dispatches += 1
+        return self._fetch(out, len(queries))
+
+    def search_reference(self, queries: list[Query]):
+        """Single-device fused baseline: the identical per-shard
+        ``search_batch`` programs run shard-at-a-time on the default
+        device, merged by the same ``merge_topk`` in the same shard order.
+        The mesh path must match this bit-for-bit (tested at selectivities
+        {0.5, 0.1, 0.02})."""
+        q_vecs, fields, allowed = pack_query_batch(queries, v_cap=self.v_cap)
+        per_v, per_i, hops, walks = [], [], 0, 0
+        for s in range(self.n_shards):
+            datlas = jax.tree_util.tree_unflatten(
+                self._tdef, [l[s] for l in self._leaves])
+            out = self._ref(datlas, self.vectors[s], self.adjacency[s],
+                            self.metadata[s], self.valid_bm[s],
+                            q_vecs, fields, allowed)
+            per_v.append(out["res_v"])
+            per_i.append(jnp.where(
+                out["res_i"] >= 0,
+                self.global_ids[s][jnp.maximum(out["res_i"], 0)], -1))
+            hops = hops + out["hops"]
+            walks = walks + out["walks"]
+        res_v, res_i = merge_topk(jnp.stack(per_v), jnp.stack(per_i),
+                                  self.p.k)
+        return self._fetch(dict(res_v=res_v, res_i=res_i, hops=hops,
+                                walks=walks), len(queries))

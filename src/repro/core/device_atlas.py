@@ -66,6 +66,21 @@ def pack_predicates(preds, *, max_clauses: int | None = None,
 pack_bitmap = pack_bits
 
 
+def stack_atlases(atlases: list["DeviceAtlas"]) -> "DeviceAtlas":
+    """Stack per-shard atlases into one DeviceAtlas pytree whose leaves
+    carry a leading shard dim (the form ``shard_map`` partitions over the
+    mesh ``data`` axis). Shards must agree on n_clusters / row count /
+    v_cap — the sharded build pads them to common shapes first."""
+    caps = {a.v_cap for a in atlases}
+    if len(caps) != 1:
+        raise ValueError(f"shard atlases disagree on v_cap: {sorted(caps)}")
+    shapes = {tuple(l.shape for l in jax.tree_util.tree_leaves(a))
+              for a in atlases}
+    if len(shapes) != 1:
+        raise ValueError(f"shard atlases disagree on shapes: {shapes}")
+    return jax.tree.map(lambda *ls: jnp.stack(ls), *atlases)
+
+
 def _excl_cumsum(x: jax.Array) -> jax.Array:
     return jnp.cumsum(x, axis=-1) - x
 
@@ -124,6 +139,30 @@ class DeviceAtlas:
             jnp.asarray(atlas.centroids, jnp.float32), jnp.asarray(assign),
             jnp.asarray(order), jnp.asarray(offsets, jnp.int32),
             jnp.asarray(inv_perm), jnp.asarray(pres), v_cap=v_cap)
+
+    def pad_rows(self, m: int) -> "DeviceAtlas":
+        """Extend the point-indexed arrays to ``m`` rows with inert pad
+        entries (sharded indexes pad every shard to a common row count).
+
+        Pads are assigned to cluster 0 and appended at the tail of
+        ``csr_pts``/``inv_perm`` (each pad maps to itself). That leaves the
+        real-row CSR ranks untouched — ``_matched_counts`` cumsums run over
+        positions, and a pad position contributes 0 because the caller's
+        pass bitmap (ANDed with the shard's row-validity bitmap) is always
+        False on pads — so selection math never sees them."""
+        n = self.assign.shape[0]
+        if m < n:
+            raise ValueError(f"pad_rows to {m} < current {n} rows")
+        if m == n:
+            return self
+        tail = jnp.arange(n, m, dtype=jnp.int32)
+        return DeviceAtlas(
+            self.centroids,
+            jnp.concatenate([self.assign, jnp.zeros(m - n, jnp.int32)]),
+            jnp.concatenate([self.csr_pts, tail]),
+            self.csr_offsets,
+            jnp.concatenate([self.inv_perm, tail]),
+            self.presence, v_cap=self.v_cap)
 
     # -- batched query-time operations (all jittable, fixed shapes) ----------
     def matching_clusters_batch(self, fields: jax.Array,

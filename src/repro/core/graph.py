@@ -123,6 +123,53 @@ def build_alpha_knn(vectors: np.ndarray, k: int = 32, r_max: int = 128,
     return Graph(neighbors, degrees)
 
 
+def shard_bounds(n: int, n_shards: int) -> list[tuple[int, int]]:
+    """Balanced contiguous row partition of an n-row corpus into
+    ``n_shards`` blocks (the mesh ``data``-axis layout): sizes differ by at
+    most 1 (the first n % S shards carry the extra row), so no shard is
+    ever empty and ceil(n/S) remains the maximum — the common padded row
+    count the sharded index build uses. A fixed-stride ceil(n/S) split
+    would leave trailing shards empty whenever (S-1)*ceil(n/S) >= n."""
+    if not 1 <= n_shards <= n:
+        raise ValueError(f"need 1 <= n_shards <= n, got {n_shards} for n={n}")
+    q, r = divmod(n, n_shards)
+    bounds, lo = [], 0
+    for s in range(n_shards):
+        hi = lo + q + (1 if s < r else 0)
+        bounds.append((lo, hi))
+        lo = hi
+    return bounds
+
+
+def build_shard_graphs(vectors: np.ndarray, n_shards: int, *, k: int = 32,
+                       r_max: int = 128, alpha: float = 1.2,
+                       block: int = 2048) -> tuple[list[Graph],
+                                                   list[tuple[int, int]]]:
+    """Shard-local Algorithm 1: one independent α-kNN graph per contiguous
+    row block, built over that shard's vectors only (edges never cross
+    shards, so adjacency stays shard-local int32 and the per-shard walk
+    needs no remote gathers). Returns (graphs, bounds); neighbor ids are
+    LOCAL to each shard — ``bounds[s][0] + local`` recovers the global id."""
+    bounds = shard_bounds(vectors.shape[0], n_shards)
+    graphs = []
+    for lo, hi in bounds:
+        n_s = hi - lo
+        graphs.append(build_alpha_knn(vectors[lo:hi], k=min(k, n_s - 1),
+                                      r_max=r_max, alpha=alpha, block=block))
+    return graphs, bounds
+
+
+def stack_adjacency(graphs: list[Graph], m: int) -> np.ndarray:
+    """Per-shard padded adjacencies -> one (S, m, R) int32 block, R = max
+    r_pad over shards, -1 padded (rows beyond a shard's real count are all
+    -1: pad rows have no edges and are never gathered)."""
+    r = max(g.r_pad for g in graphs)
+    out = np.full((len(graphs), m, r), -1, np.int32)
+    for s, g in enumerate(graphs):
+        out[s, : g.n, : g.r_pad] = g.neighbors
+    return out
+
+
 def graph_stats(g: Graph) -> dict:
     return {
         "total_edges": g.n_edges,

@@ -25,3 +25,9 @@ def make_local_mesh(data: int = 1, model: int = 1):
 
 def data_axis_names(mesh) -> tuple:
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def index_axis_size(mesh, axis: str = "data") -> int:
+    """Corpus shard count a sharded index gets on this mesh: the size of
+    the row-partition axis (DESIGN.md §7), 1 when the mesh lacks it."""
+    return int(mesh.shape[axis]) if axis in mesh.axis_names else 1

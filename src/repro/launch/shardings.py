@@ -143,6 +143,17 @@ def batch_shardings(cfg: ArchConfig, mesh, batch_specs, policy: str = "tp"):
     return jax.tree_util.tree_map_with_path(assign, batch_specs)
 
 
+def index_shardings(mesh, axis: str = "data") -> dict:
+    """Placement for the sharded search index (DESIGN.md §7): every
+    corpus-row-indexed leaf (vectors, adjacency, metadata, global ids,
+    validity bitmaps, and all per-shard DeviceAtlas leaves) is partitioned
+    on its leading shard dim over the ``data`` axis; query-side inputs
+    (q_vecs, clause tables) stay replicated so every shard searches the
+    whole batch."""
+    return {"rows": NamedSharding(mesh, P(axis)),
+            "replicated": NamedSharding(mesh, P())}
+
+
 def cache_shardings(cfg: ArchConfig, mesh, cache_spec_tree):
     dp = data_axis_names(mesh)
     n_data = 1

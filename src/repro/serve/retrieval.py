@@ -15,33 +15,81 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core.atlas import AnchorAtlas
 from repro.core.batched.engine import BatchedEngine, BatchedParams
+from repro.core.batched.sharded import ShardedEngine, build_sharded_index
 from repro.core.graph import build_alpha_knn
 from repro.core.search import FiberIndex, SearchParams, search
 from repro.core.types import Dataset, FilterPredicate, Query, normalize
+from repro.launch.mesh import index_axis_size
 from repro.models.transformer import ShardEnv, encode
+
+# singleton (and any sub-minimum) arrivals pad up to this bucket so a
+# serving process reuses the smallest bucket's compiled program instead of
+# compiling a dedicated tiny one per arrival shape
+MIN_BUCKET = 4
+
+# single source of the index-build knobs: build() seeds graph_build from
+# these, and the lazy global/sharded builders merge them back in so a
+# hand-constructed service (empty graph_build) gets the same values
+GRAPH_BUILD_DEFAULTS = {"graph_k": 32, "r_max": 96, "alpha": 1.2,
+                        "n_clusters": None}
 
 
 @dataclasses.dataclass
 class RetrievalService:
-    index: FiberIndex
+    index: FiberIndex | None
     params: SearchParams
+    # active mesh: when its "data" axis spans >1 device, query_batch routes
+    # to the sharded engine (corpus row-partitioned, DESIGN.md §7)
+    mesh: object | None = None
+    graph_build: dict = dataclasses.field(default_factory=dict)
+    _ds: Dataset | None = dataclasses.field(default=None, repr=False)
     _engine: BatchedEngine | None = dataclasses.field(default=None,
                                                       repr=False)
+    _sharded: ShardedEngine | None = dataclasses.field(default=None,
+                                                       repr=False)
 
     @staticmethod
-    def build(ds: Dataset, *, graph_k: int = 32, r_max: int = 96,
-              alpha: float = 1.2, n_clusters: int | None = None,
-              params: SearchParams = SearchParams()) -> "RetrievalService":
-        graph = build_alpha_knn(ds.vectors, k=graph_k, r_max=r_max,
-                                alpha=alpha)
-        atlas = AnchorAtlas.build(ds, n_clusters=n_clusters)
-        return RetrievalService(
-            FiberIndex(ds.vectors, ds.metadata, graph, atlas), params)
+    def build(ds: Dataset, *, graph_k: int = GRAPH_BUILD_DEFAULTS["graph_k"],
+              r_max: int = GRAPH_BUILD_DEFAULTS["r_max"],
+              alpha: float = GRAPH_BUILD_DEFAULTS["alpha"],
+              n_clusters: int | None = None,
+              params: SearchParams = SearchParams(),
+              mesh=None) -> "RetrievalService":
+        svc = RetrievalService(
+            None, params, mesh=mesh, _ds=ds,
+            graph_build={"graph_k": graph_k, "r_max": r_max, "alpha": alpha,
+                         "n_clusters": n_clusters})
+        # a mesh-sharded service uses per-shard graphs/atlases only: defer
+        # the global build so it isn't paid (time + an (n, R) adjacency
+        # held for nothing) unless the sequential path is actually used
+        if svc._mesh_shards() <= 1:
+            svc._global_index()
+        return svc
+
+    def _global_index(self) -> FiberIndex:
+        """The single-device index (global α-kNN graph + atlas), built on
+        first use — eagerly for unmeshed services, lazily for sharded ones
+        (only ``query``/``engine`` need it there)."""
+        if self.index is None:
+            gb, ds = self._gb(), self._ds
+            graph = build_alpha_knn(ds.vectors, k=gb["graph_k"],
+                                    r_max=gb["r_max"], alpha=gb["alpha"])
+            atlas = AnchorAtlas.build(ds, n_clusters=gb["n_clusters"])
+            self.index = FiberIndex(ds.vectors, ds.metadata, graph, atlas)
+        return self.index
+
+    def _gb(self) -> dict:
+        return {**GRAPH_BUILD_DEFAULTS, **self.graph_build}
+
+    def _corpus(self) -> tuple[np.ndarray, np.ndarray]:
+        if self._ds is not None:
+            return self._ds.vectors, self._ds.metadata
+        return self.index.vectors, self.index.metadata
 
     def query(self, vector: np.ndarray, predicate: FilterPredicate,
               seed: int = 0):
-        ids, sims, stats = search(self.index, normalize(vector), predicate,
-                                  self.params, seed=seed)
+        ids, sims, stats = search(self._global_index(), normalize(vector),
+                                  predicate, self.params, seed=seed)
         return ids, sims, stats
 
     def engine(self) -> BatchedEngine:
@@ -55,34 +103,65 @@ class RetrievalService:
         wall-clock by the widest beam in the batch. Pass an explicit
         BatchedEngine for custom lockstep beams."""
         if self._engine is None:
-            p = self.params
-            self._engine = BatchedEngine(self.index, BatchedParams(
-                k=p.k, jump_budget=p.jump_budget, n_seeds=p.n_seeds,
-                c_max=p.c_max, frontier_width=p.frontier_width,
-                stall_budget=p.stall_budget, max_hops=p.max_hops))
+            self._engine = BatchedEngine(self._global_index(),
+                                         self._batched_params())
         return self._engine
+
+    def _batched_params(self) -> BatchedParams:
+        p = self.params
+        return BatchedParams(
+            k=p.k, jump_budget=p.jump_budget, n_seeds=p.n_seeds,
+            c_max=p.c_max, frontier_width=p.frontier_width,
+            stall_budget=p.stall_budget, max_hops=p.max_hops)
+
+    def _mesh_shards(self) -> int:
+        return index_axis_size(self.mesh) if self.mesh is not None else 1
+
+    def sharded_engine(self) -> ShardedEngine:
+        """Lazily-built sharded engine (DESIGN.md §7): the corpus is
+        re-partitioned row-wise over the mesh ``data`` axis with per-shard
+        subgraphs/atlases; the per-shard graph builds are each ~S² cheaper
+        than the global one."""
+        if self._sharded is None:
+            gb = self._gb()
+            vectors, metadata = self._corpus()
+            sidx = build_sharded_index(
+                vectors, metadata, self._mesh_shards(),
+                graph_k=gb["graph_k"], r_max=gb["r_max"], alpha=gb["alpha"],
+                n_clusters=gb["n_clusters"])
+            self._sharded = ShardedEngine(sidx, self.mesh,
+                                          self._batched_params())
+        return self._sharded
 
     def query_batch(self, vectors: np.ndarray,
                     predicates: list[FilterPredicate], *,
                     bucket: bool = True):
         """Batched filtered retrieval: the whole batch is ONE device
-        dispatch (fused predicate eval + restart loop + lockstep walks).
+        dispatch (fused predicate eval + restart loop + lockstep walks),
+        routed to the sharded engine when the service's mesh partitions the
+        corpus over >1 device.
 
         With ``bucket`` (default), the batch is padded to the next
-        power-of-two with inert dummy queries (zero vector, match-nothing
-        predicate: they never seed, walk, or affect the loop) so a serving
-        process compiles one program per bucket instead of one per arrival
-        batch size; results are sliced back to the real queries. Returns
-        (list of id arrays, engine stats dict)."""
+        power-of-two — and at least ``MIN_BUCKET``, so singleton arrivals
+        share the smallest bucket's program instead of compiling their own
+        — with inert dummy queries (zero vector, match-nothing predicate:
+        they never seed, walk, or affect the loop); results are sliced back
+        to the real queries. An empty batch returns ``([], {})`` without
+        touching the engine. Returns (list of id arrays, stats dict)."""
+        q_real = min(len(vectors), len(predicates))
+        if q_real == 0:
+            return [], {}
         queries = [Query(vector=v, predicate=p)
                    for v, p in zip(normalize(vectors), predicates)]
-        q_real = len(queries)
-        if bucket and q_real > 1:
-            target = 1 << (q_real - 1).bit_length()
-            dummy = Query(vector=np.zeros_like(queries[0].vector),
-                          predicate=FilterPredicate.make({0: []}))
-            queries = queries + [dummy] * (target - q_real)
-        ids, stats = self.engine().search(queries)
+        if bucket:
+            target = max(MIN_BUCKET, 1 << (q_real - 1).bit_length())
+            if target > q_real:
+                dummy = Query(vector=np.zeros_like(queries[0].vector),
+                              predicate=FilterPredicate.make({0: []}))
+                queries = queries + [dummy] * (target - q_real)
+        eng = (self.sharded_engine() if self._mesh_shards() > 1
+               else self.engine())
+        ids, stats = eng.search(queries)
         return ids[:q_real], {k: v[:q_real] for k, v in stats.items()}
 
 

@@ -56,6 +56,91 @@ def test_query_batch_matches_filters():
     assert np.asarray(ids[2]).size == 5  # unconstrained fills k
 
 
+def test_query_batch_empty_and_singleton_bucket():
+    """Serving-path regressions (ISSUE 3): an empty batch returns
+    ``([], {})`` without building or dispatching the engine, and a
+    singleton batch pads to MIN_BUCKET so Q=1 arrivals share the smallest
+    bucket's compiled program instead of compiling their own shape."""
+    from repro.core.types import Dataset, FilterPredicate, normalize
+    from repro.serve.retrieval import MIN_BUCKET, RetrievalService
+
+    rng = np.random.default_rng(9)
+    n, d = 600, 16
+    vecs = normalize(rng.standard_normal((n, d)))
+    meta = rng.integers(0, 5, (n, 3)).astype(np.int32)
+    ds = Dataset(vecs, meta, [f"f{i}" for i in range(3)], [5] * 3)
+    svc = RetrievalService.build(ds, graph_k=8, r_max=24,
+                                 params=SearchParams(k=5, max_hops=40))
+
+    ids, stats = svc.query_batch(np.zeros((0, d)), [])
+    assert ids == [] and stats == {}
+    assert svc._engine is None  # empty batch never touches the engine
+
+    eng = svc.engine()
+    seen: list[int] = []
+    orig = eng.search
+
+    def spy(queries, **kw):
+        seen.append(len(queries))
+        return orig(queries, **kw)
+
+    eng.search = spy
+    try:
+        d0 = eng.dispatches
+        pred = FilterPredicate.make({0: [1]})
+        ids, stats = svc.query_batch(rng.standard_normal((1, d)), [pred])
+        assert len(ids) == 1 and stats["walks"].shape == (1,)
+        assert eng.dispatches - d0 == 1
+        # a 3-query arrival lands in the same bucket -> same program
+        svc.query_batch(rng.standard_normal((3, d)), [pred] * 3)
+        assert seen == [MIN_BUCKET, MIN_BUCKET]
+        assert eng.dispatches - d0 == 2
+    finally:
+        eng.search = orig
+    if hasattr(eng._search, "_cache_size"):
+        assert eng._search._cache_size() == 1
+
+
+def test_query_batch_wide_clause_widths_share_program():
+    """Two predicates wider than MAX_CLAUSES but with different widths
+    must pack to the same power-of-two clause dim (silent per-width
+    recompiles were ISSUE 3's third serving bug)."""
+    from repro.core.batched.engine import clause_dim
+    from repro.core.types import Dataset, FilterPredicate, Query, normalize
+    from repro.kernels.ops import MAX_CLAUSES
+    from repro.serve.retrieval import RetrievalService
+
+    assert clause_dim(0) == clause_dim(MAX_CLAUSES) == MAX_CLAUSES
+    assert clause_dim(5) == clause_dim(7) == 8 and clause_dim(9) == 16
+
+    rng = np.random.default_rng(5)
+    n, d, f_count = 600, 16, 8
+    vecs = normalize(rng.standard_normal((n, d)))
+    meta = rng.integers(0, 4, (n, f_count)).astype(np.int32)
+    ds = Dataset(vecs, meta, [f"f{i}" for i in range(f_count)],
+                 [4] * f_count)
+    svc = RetrievalService.build(ds, graph_k=8, r_max=24,
+                                 params=SearchParams(k=5, max_hops=40))
+    eng = svc.engine()
+
+    def wide_query(width):  # clauses from a real row -> matches >= 1 point
+        row = meta[0]
+        pred = FilterPredicate.make(
+            {f: [int(row[f]), (int(row[f]) + 1) % 4] for f in range(width)})
+        return Query(vector=normalize(rng.standard_normal(d))
+                     .astype(np.float32), predicate=pred)
+
+    q5, q7 = wide_query(5), wide_query(7)
+    _, f5, a5 = eng._pack_queries([q5])
+    _, f7, a7 = eng._pack_queries([q7])
+    assert f5.shape == f7.shape == (1, 8)
+    assert a5.shape == a7.shape
+    eng.search([q5])
+    eng.search([q7])
+    if hasattr(eng._search, "_cache_size"):
+        assert eng._search._cache_size() == 1
+
+
 def test_encoded_retriever(tiny_model):
     """True end-to-end RAG bridge: the corpus is built from MODEL-encoded
     documents, then model-encoded queries retrieve under a filter."""
