@@ -26,7 +26,9 @@ def kernel_oracle_parity() -> list[str]:
     descriptions (empty = all good)."""
     import numpy as np
     import jax.numpy as jnp
-    from repro.core.device_atlas import pack_predicates
+    from repro.core.device_atlas import pack_dnf, pack_predicates
+    from repro.core.predicate import (And, FilterExpr, In, Not, Or, Range,
+                                      compile_to_dnf)
     from repro.core.types import FilterPredicate
     from repro.kernels import ops, ref
 
@@ -69,6 +71,29 @@ def kernel_oracle_parity() -> list[str]:
     _chk("filter_eval_batch",
          ops.filter_eval_batch(meta, fields_b, allowed_b, tn=128),
          ref.filter_eval_batch(meta, fields_b, allowed_b), exact=True)
+
+    # disjunction path (DESIGN.md §8): DNF clause tables through the
+    # in-kernel disjunct union vs the jnp oracle vs the expression tree
+    vocab = [40] * 6
+    exprs = [Or(In(0, [3, 4]), In(2, [1])),
+             Not(In(1, list(range(10)))),
+             And(In(0, [3, 4]), Or(In(2, [1]), In(5, [2]))),
+             Or(Range(3, 5, 20), And(In(0, [1, 2]), Not(In(4, [0])))),
+             FilterExpr.never(), FilterExpr.always()]
+    dnfs = [compile_to_dnf(e, vocab) for e in exprs]
+    f_d, a_d, nd = pack_dnf(dnfs, v_cap=64)
+    out_dk = np.asarray(ops.filter_eval_batch(
+        meta, jnp.asarray(f_d), jnp.asarray(a_d), jnp.asarray(nd), tn=128))
+    _chk("filter_eval_batch/dnf", out_dk,
+         ref.filter_eval_batch(meta, jnp.asarray(f_d), jnp.asarray(a_d)),
+         exact=True)
+    meta_np = np.asarray(meta)
+    for qi, e in enumerate(exprs):
+        bits = np.unpackbits(out_dk[qi].view(np.uint8),
+                             bitorder="little")[: meta_np.shape[0]]
+        if not np.array_equal(bits.astype(bool), e.mask(meta_np, vocab)):
+            fails.append(f"filter_eval_batch/dnf expr {qi}: "
+                         f"kernel != expression-tree oracle")
     return fails
 
 
@@ -98,6 +123,13 @@ def smoke() -> None:
     assert 0.0 <= sh["recall"] <= 1.0
     _csv("search/smoke_sharded", 1e6 / sh["qps"],
          f"recall={sh['recall']:.3f} shards={sh['n_shards']}")
+    # disjunctive path: the or2 row ran its own kernel/oracle bitmap
+    # parity gate inside or_search_bench (raises on mismatch)
+    od = next(v for k, v in res.items() if k.startswith("or2_sel"))
+    assert od["dispatches_per_batch"] == 1, od
+    assert 0.0 <= od["recall"] <= 1.0
+    assert od["n_disjuncts"] == 2
+    _csv("search/smoke_or2", 1e6 / od["qps"], f"recall={od['recall']:.3f}")
     print(f"[smoke search bench {time.time()-t0:.0f}s] OK")
 
 
@@ -106,7 +138,8 @@ def main() -> None:
     from benchmarks.kernel_bench import (anchor_select_bench, engine_bench,
                                          kernel_microbench)
     from benchmarks.search_bench import OUT_PATH as SEARCH_OUT
-    from benchmarks.search_bench import search_bench, write_baseline
+    from benchmarks.search_bench import (or_search_bench, search_bench,
+                                         write_baseline)
 
     results: dict = {}
     t_all = time.time()
@@ -198,6 +231,7 @@ def main() -> None:
 
     t0 = time.time()
     results["search"] = search_bench()
+    results["search"].update(or_search_bench())  # disjunctive or2 rows
     write_baseline(results["search"])
     print("\n== Fused single-dispatch search (Q x selectivity) ==")
     for name, r in results["search"].items():

@@ -12,8 +12,13 @@ serving perf trajectory. Each cell also records the walk mask-state footprint
 (``sharded<S>/qN/selX``): same corpus recipe, partitioned over the ``data``
 axis, one shard_map dispatch per batch.
 
+``or_search_bench`` adds disjunctive rows (``or2_sel0.1``, ``or2_sel0.02``):
+two-field ``Or`` predicates with engineered union selectivity, compiled to
+DNF clause tables and evaluated by the in-kernel disjunct union
+(DESIGN.md §8) — still one fused dispatch per batch.
+
 ``--smoke`` (or smoke=True) runs a tiny corpus with 2 queries (fused +
-sharded paths): the CI entrypoint guard, not a measurement.
+sharded + disjunctive paths): the CI entrypoint guard, not a measurement.
 """
 from __future__ import annotations
 
@@ -28,11 +33,41 @@ from repro.core.batched.engine import BatchedEngine, BatchedParams
 from repro.core.graph import build_alpha_knn
 from repro.core.search import FiberIndex
 from repro.data.ground_truth import attach_ground_truth, recall_at_k
-from repro.data.synth import make_selectivity_dataset, make_selectivity_queries
+from repro.data.synth import (add_or_pair_fields, make_or_queries,
+                              make_selectivity_dataset,
+                              make_selectivity_queries)
 
 SELECTIVITIES = (0.5, 0.1, 0.02)
+OR_SELECTIVITIES = (0.1, 0.02)
 BATCH_SIZES = (16, 64, 256)
 OUT_PATH = "BENCH_search.json"
+
+
+def measure_batch(eng, batch, reps: int) -> dict:
+    """Shared measurement protocol for every bench family: one warmup/
+    compile call, ``reps`` timed searches, p50/p99/qps/recall/walk stats
+    and the dispatch count of the warmup call."""
+    q_n = len(batch)
+    d0 = eng.dispatches
+    ids, stats = eng.search(batch)  # compile at this batch shape
+    disp = eng.dispatches - d0
+    lat = []
+    for _ in range(reps):
+        t0 = time.time()
+        ids, stats = eng.search(batch)
+        lat.append(time.time() - t0)
+    lat_ms = np.asarray(lat) * 1e3
+    rec = float(np.mean([recall_at_k(np.asarray(i), q.gt_ids)
+                         for i, q in zip(ids, batch)]))
+    return {
+        "qps": q_n * reps / float(np.sum(lat)),
+        "p50_ms": float(np.percentile(lat_ms, 50)),
+        "p99_ms": float(np.percentile(lat_ms, 99)),
+        "recall": rec,
+        "mean_walks": float(np.mean(stats["walks"])),
+        "mean_hops": float(np.mean(stats["hops"])),
+        "dispatches_per_batch": disp,
+    }
 
 
 def search_bench(batch_sizes=BATCH_SIZES, selectivities=SELECTIVITIES, *,
@@ -60,28 +95,63 @@ def search_bench(batch_sizes=BATCH_SIZES, selectivities=SELECTIVITIES, *,
         pools[s] = qs
     for q_n in batch_sizes:
         for si, sel in enumerate(selectivities):
+            row = measure_batch(eng, pools[sel][:q_n], reps)
+            row["mask_state_bytes"] = 3 * q_n * n_words * 4
+            out[f"q{q_n}/sel{sel}"] = row
+    return out
+
+
+def or_search_bench(batch_sizes=(64,), or_sels=OR_SELECTIVITIES, *,
+                    n: int = 8000, d: int = 64, k: int = 10, reps: int = 20,
+                    graph_k: int = 16, seed: int = 7) -> dict:
+    """Disjunctive rows: the ``search_bench`` corpus recipe with two extra
+    engineered or-pair fields, queried with two-field ``Or`` expressions
+    whose union selectivity ≈ each entry of ``or_sels``. Keys are
+    ``or2_sel<sel>`` (Q fixed per batch size, default 64). Each row also
+    asserts kernel/oracle bitmap parity on its batch — a drifting
+    disjunction kernel can't silently report a good number."""
+    import jax.numpy as jnp
+
+    from repro.core.batched.bitmap import pack_bits
+    from repro.core.batched.engine import _eval_passes
+
+    ds = add_or_pair_fields(
+        make_selectivity_dataset(SELECTIVITIES, n=n, d=d, n_components=24,
+                                 seed=seed), sels=or_sels)
+    graph = build_alpha_knn(ds.vectors, k=graph_k, r_max=3 * graph_k,
+                            alpha=1.2)
+    atlas = AnchorAtlas.build(ds, seed=0)
+    index = FiberIndex(ds.vectors, ds.metadata, graph, atlas)
+    eng = BatchedEngine(index, BatchedParams(k=k, beam_width=4),
+                        vocab_sizes=ds.vocab_sizes)
+    n_words = (n + 31) // 32
+    out: dict = {}
+    q_max = max(batch_sizes)
+    pools = {}
+    for ci, sel in enumerate(or_sels):
+        qs = make_or_queries(ds, ci + 1, q_max)
+        attach_ground_truth(ds, qs, k=k)
+        pools[sel] = qs
+    for q_n in batch_sizes:
+        for sel in or_sels:
             batch = pools[sel][:q_n]
-            d0 = eng.dispatches
-            ids, stats = eng.search(batch)  # compile at this batch shape
-            disp = eng.dispatches - d0
-            lat = []
-            for _ in range(reps):
-                t0 = time.time()
-                ids, stats = eng.search(batch)
-                lat.append(time.time() - t0)
-            lat_ms = np.asarray(lat) * 1e3
-            rec = float(np.mean([recall_at_k(np.asarray(i), q.gt_ids)
-                                 for i, q in zip(ids, batch)]))
-            out[f"q{q_n}/sel{sel}"] = {
-                "qps": q_n * reps / float(np.sum(lat)),
-                "p50_ms": float(np.percentile(lat_ms, 50)),
-                "p99_ms": float(np.percentile(lat_ms, 99)),
-                "recall": rec,
-                "mean_walks": float(np.mean(stats["walks"])),
-                "mean_hops": float(np.mean(stats["hops"])),
-                "mask_state_bytes": 3 * q_n * n_words * 4,
-                "dispatches_per_batch": disp,
-            }
+            # disjunction kernel vs expression-tree oracle, bit-exact
+            _, f_t, a_t = eng._pack_queries(batch)
+            got = np.asarray(_eval_passes(eng.metadata, f_t, a_t))
+            want = np.asarray(pack_bits(jnp.asarray(np.stack(
+                [q.predicate.mask(ds.metadata, ds.vocab_sizes)
+                 for q in batch]))))
+            if not np.array_equal(got, want):
+                raise AssertionError(
+                    f"disjunction kernel/oracle bitmap mismatch at "
+                    f"or2_sel{sel}")
+            key = (f"or2_sel{sel}" if len(batch_sizes) == 1
+                   else f"q{q_n}/or2_sel{sel}")
+            row = measure_batch(eng, batch, reps)
+            row.update(n_disjuncts=2,
+                       clause_table_shape=list(np.asarray(f_t).shape),
+                       mask_state_bytes=3 * q_n * n_words * 4)
+            out[key] = row
     return out
 
 
@@ -117,29 +187,10 @@ def sharded_search_bench(batch_sizes=(64,), selectivities=SELECTIVITIES, *,
         pools[sel] = qs
     for q_n in batch_sizes:
         for sel in selectivities:
-            batch = pools[sel][:q_n]
-            d0 = eng.dispatches
-            ids, stats = eng.search(batch)  # compile at this batch shape
-            disp = eng.dispatches - d0
-            lat = []
-            for _ in range(reps):
-                t0 = time.time()
-                ids, stats = eng.search(batch)
-                lat.append(time.time() - t0)
-            lat_ms = np.asarray(lat) * 1e3
-            rec = float(np.mean([recall_at_k(np.asarray(i), q.gt_ids)
-                                 for i, q in zip(ids, batch)]))
-            out[f"sharded{s}/q{q_n}/sel{sel}"] = {
-                "qps": q_n * reps / float(np.sum(lat)),
-                "p50_ms": float(np.percentile(lat_ms, 50)),
-                "p99_ms": float(np.percentile(lat_ms, 99)),
-                "recall": rec,
-                "mean_walks": float(np.mean(stats["walks"])),
-                "mean_hops": float(np.mean(stats["hops"])),
-                "n_shards": s,
-                "mask_state_bytes_per_shard": 3 * q_n * m_words * 4,
-                "dispatches_per_batch": disp,
-            }
+            row = measure_batch(eng, pools[sel][:q_n], reps)
+            row.update(n_shards=s,
+                       mask_state_bytes_per_shard=3 * q_n * m_words * 4)
+            out[f"sharded{s}/q{q_n}/sel{sel}"] = row
     return out
 
 
@@ -159,9 +210,15 @@ def main(smoke: bool = False) -> dict:
         results.update(sharded_search_bench(
             batch_sizes=(2,), selectivities=(0.5,), n=600, d=16, k=5,
             reps=1, graph_k=8))
+        # and the disjunction path: Or-of-two-fields through the DNF
+        # tables + in-kernel union, with its built-in bitmap parity gate
+        results.update(or_search_bench(
+            batch_sizes=(2,), or_sels=(0.3,), n=600, d=16, k=5, reps=1,
+            graph_k=8))
     else:
         results = search_bench()
         results.update(sharded_search_bench())
+        results.update(or_search_bench())
         write_baseline(results)
     return results
 
@@ -172,7 +229,9 @@ if __name__ == "__main__":
     for name, r in res.items():
         if name == "config":
             continue
+        mask_b = r.get("mask_state_bytes",
+                       r.get("mask_state_bytes_per_shard", 0))
         print(f"{name:14s} qps={r['qps']:8.1f} p50={r['p50_ms']:7.1f}ms "
               f"p99={r['p99_ms']:7.1f}ms recall={r['recall']:.3f} "
-              f"mask={r['mask_state_bytes']/1024:.0f}KiB "
+              f"mask={mask_b/1024:.0f}KiB "
               f"dispatch={r['dispatches_per_batch']}")

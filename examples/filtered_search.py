@@ -46,3 +46,17 @@ for name, fn in methods.items():
     ms = (time.time() - t0) / len(queries) * 1000
     print(f"{name:26s} {np.mean(recs):7.3f} "
           f"{np.mean([r == 0 for r in recs]):6.1%} {ms:7.2f}")
+
+# -- composable filter expressions (DESIGN.md §8) ---------------------------
+# Any Or/Not/Range composition compiles to bounded-DNF clause tables and
+# runs through the same engines; the sequential path unions the atlas
+# candidates per disjunct.
+from repro.core import In, Not, Or  # noqa: E402
+
+expr = Or(In(0, [int(ds.metadata[0, 0])]),
+          In(1, [int(ds.metadata[1, 1])])) & Not(In(2, [0]))
+sel = expr.mask(ds.metadata, ds.vocab_sizes).mean()
+ids, sims, stats = search(index, queries[0].vector, expr,
+                          SearchParams(k=K, walk="guided", beam_width=2))
+print(f"\nOr/Not expression (selectivity {sel:.1%}): "
+      f"{len(ids)} results, {stats.n_walks} walks, {stats.hops} hops")

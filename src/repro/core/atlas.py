@@ -14,6 +14,24 @@ from repro.core.kmeans import kmeans
 from repro.core.types import Dataset, FilterPredicate
 
 
+def _disjuncts(pred) -> tuple:
+    """Clause lists of a predicate's disjuncts: a compiled ``DNF`` carries
+    several, a conjunctive ``FilterPredicate`` is its own single one."""
+    d = getattr(pred, "disjuncts", None)
+    return d if d is not None else (pred.clauses,)
+
+
+def _union_over_disjuncts(pred, conj_fn) -> np.ndarray:
+    """Evaluate a per-conjunct candidate function over every disjunct of
+    ``pred`` and union the results (sorted unique int32 ids) — the one
+    OR-semantics used by all atlas candidate lookups."""
+    parts = [conj_fn(cl) for cl in _disjuncts(pred)]
+    parts = [p for p in parts if p.size]
+    if not parts:
+        return np.empty(0, dtype=np.int32)
+    return np.unique(np.concatenate(parts))
+
+
 @dataclasses.dataclass
 class AnchorAtlas:
     centroids: np.ndarray                      # (K, d) unit-norm
@@ -59,10 +77,10 @@ class AnchorAtlas:
         return AnchorAtlas(centroids, assign.astype(np.int32), members, cindex)
 
     # -- query-time operations ----------------------------------------------
-    def matching_clusters(self, pred: FilterPredicate) -> np.ndarray:
+    def _matching_clusters_conj(self, clauses) -> np.ndarray:
         """C_match = ∩_i cluster_index[f_i][A_i] in O(|S|) set ops."""
         acc: np.ndarray | None = None
-        for f, allowed in pred.clauses:
+        for f, allowed in clauses:
             idx = self.cluster_index[f]
             cs = [idx[v] for v in allowed if v in idx]
             cur = (np.unique(np.concatenate(cs)) if cs
@@ -71,15 +89,20 @@ class AnchorAtlas:
                                                          assume_unique=True)
             if acc.size == 0:
                 return acc
-        if acc is None:  # unconstrained predicate: all clusters match
+        if acc is None:  # unconstrained conjunct: all clusters match
             acc = np.arange(self.n_clusters, dtype=np.int32)
         return acc
 
-    def cluster_members_matching(self, c: int, pred: FilterPredicate,
-                                 cap: int = 4096) -> np.ndarray:
-        """Filter-matching point ids inside cluster c via members intersection."""
+    def matching_clusters(self, pred) -> np.ndarray:
+        """Candidate clusters for a conjunctive ``FilterPredicate`` (the
+        paper's postings intersection) or a compiled ``DNF`` (union of the
+        per-disjunct intersections — a cluster is a candidate iff any
+        disjunct can match inside it)."""
+        return _union_over_disjuncts(pred, self._matching_clusters_conj)
+
+    def _members_matching_conj(self, c: int, clauses) -> np.ndarray:
         acc: np.ndarray | None = None
-        for f, allowed in pred.clauses:
+        for f, allowed in clauses:
             by_val = self.members[c][f]
             parts = [by_val[v] for v in allowed if v in by_val]
             cur = (np.unique(np.concatenate(parts)) if parts
@@ -90,7 +113,15 @@ class AnchorAtlas:
                 return acc
         if acc is None:
             acc = np.nonzero(self.assign == c)[0].astype(np.int32)
-        return acc[:cap]
+        return acc
+
+    def cluster_members_matching(self, c: int, pred,
+                                 cap: int = 4096) -> np.ndarray:
+        """Filter-matching point ids inside cluster c via members
+        intersection, unioned over the predicate's disjuncts (a single
+        conjunction for plain FilterPredicates)."""
+        return _union_over_disjuncts(
+            pred, lambda cl: self._members_matching_conj(c, cl))[:cap]
 
     def select_anchors(
         self, q: np.ndarray, pred: FilterPredicate, processed: set[int],

@@ -34,9 +34,11 @@ import jax.numpy as jnp
 
 from repro.core.batched.bitmap import (n_words, popcount, set_bits,
                                        test_bits, unpack_bits)
-from repro.core.device_atlas import DeviceAtlas, pack_predicates
+from repro.core.device_atlas import (DeviceAtlas, pack_dnf, pack_predicates,
+                                     table_n_disj)
+from repro.core.predicate import as_dnf
 from repro.core.search import FiberIndex, SearchParams
-from repro.core.types import Query
+from repro.core.types import FilterPredicate, Query
 from repro.kernels import ref
 from repro.kernels.ops import MAX_CLAUSES
 
@@ -87,11 +89,15 @@ def _expand_scores(q_vecs, vectors, nbrs, pass_bm):
 def _eval_passes(metadata, fields, allowed):
     """Batched predicate evaluation -> packed (Q, ceil(n/32)) uint32 pass
     bitmaps: the filter_eval Pallas corpus sweep on TPU, the jnp oracle
-    elsewhere."""
+    elsewhere. Disjunctive (Q, D, C) tables carry their live-disjunct
+    counts in the dead-disjunct sentinel; the kernels OR the per-disjunct
+    conjunctive bitmaps in the same sweep (DESIGN.md §8)."""
+    n_disj = table_n_disj(fields) if fields.ndim == 3 else None
     if jax.default_backend() == "tpu":
         from repro.kernels.filter_eval import filter_eval_batch
-        return filter_eval_batch(metadata, fields, allowed, interpret=False)
-    return ref.filter_eval_batch(metadata, fields, allowed)
+        return filter_eval_batch(metadata, fields, allowed, n_disj,
+                                 interpret=False)
+    return ref.filter_eval_batch(metadata, fields, allowed, n_disj)
 
 
 def walk_batch(vectors, adjacency, pass_bm, q_vecs, seeds,
@@ -355,13 +361,44 @@ def clause_dim(n_clauses: int) -> int:
     return 1 << (n_clauses - 1).bit_length()
 
 
-def pack_query_batch(queries: list[Query], *, v_cap: int):
+def disjunct_dim(n_disjuncts: int) -> int:
+    """Compiled disjunct-table depth for a batch whose widest predicate has
+    ``n_disjuncts`` disjuncts: 1 keeps the legacy conjunctive (Q, C) table
+    (so purely-conjunctive traffic reuses its existing programs verbatim),
+    any disjunction buckets to the next power of two ≥ 2."""
+    if n_disjuncts <= 1:
+        return 1
+    return 1 << (n_disjuncts - 1).bit_length()
+
+
+def pack_query_batch(queries: list[Query], *, v_cap: int,
+                     vocab_sizes=None):
     """Host-side query pack shared by the single-device and sharded
     engines: (Q, d) vector stack + clause tables with the clause dimension
-    bucketed by ``clause_dim``."""
+    bucketed by ``clause_dim``.
+
+    Predicates may be conjunctive ``FilterPredicate``s, ``FilterExpr``
+    trees, or precompiled ``DNF``s; expressions compile against
+    ``vocab_sizes`` (Not/Range lowering). When every predicate lowers to
+    ≤ 1 disjunct the tables keep the legacy (Q, C) conjunctive shape —
+    byte-identical to the pre-algebra pack, so existing compiled programs
+    are reused — otherwise they widen to (Q, D, C) with D bucketed by
+    ``disjunct_dim``."""
     q_vecs = jnp.asarray(np.stack([q.vector for q in queries]))
-    n_cl = max((q.predicate.n_clauses for q in queries), default=0)
-    f_np, a_np = pack_predicates([q.predicate for q in queries],
+    dnfs = [q.predicate if isinstance(q.predicate, FilterPredicate)
+            else as_dnf(q.predicate, vocab_sizes) for q in queries]
+    d_max = max((1 if isinstance(p, FilterPredicate) else p.n_disjuncts
+                 for p in dnfs), default=0)
+    if d_max <= 1:
+        preds = [p if isinstance(p, FilterPredicate) else p.to_predicate()
+                 for p in dnfs]
+        n_cl = max((p.n_clauses for p in preds), default=0)
+        f_np, a_np = pack_predicates(preds, max_clauses=clause_dim(n_cl),
+                                     v_cap=v_cap)
+    else:
+        dnfs = [as_dnf(p) for p in dnfs]
+        n_cl = max((p.max_clauses for p in dnfs), default=0)
+        f_np, a_np, _ = pack_dnf(dnfs, max_disjuncts=disjunct_dim(d_max),
                                  max_clauses=clause_dim(n_cl), v_cap=v_cap)
     return q_vecs, jnp.asarray(f_np), jnp.asarray(a_np)
 
@@ -380,10 +417,17 @@ class BatchedEngine:
 
     def __init__(self, index: FiberIndex,
                  params: BatchedParams = BatchedParams(),
-                 seed_backend: str = "topk", v_cap: int | None = None):
+                 seed_backend: str = "topk", v_cap: int | None = None,
+                 vocab_sizes=None):
         self.index = index
         self.p = params
         self.datlas = index.atlas.to_device(v_cap=v_cap)
+        # per-field domains for Not/Range lowering in FilterExpr queries;
+        # derived from observed codes when the dataset's declaration isn't
+        # handed in (identical masks for any domain covering the corpus)
+        self.vocab_sizes = (tuple(int(v) for v in vocab_sizes)
+                            if vocab_sizes is not None
+                            else index.vocab_sizes())
         on_cpu = jax.default_backend() == "cpu"  # donation unsupported there
         self._round = jax.jit(
             functools.partial(atlas_round, p=params,
@@ -400,7 +444,8 @@ class BatchedEngine:
         self.dispatches = 0
 
     def _pack_queries(self, queries: list[Query]):
-        return pack_query_batch(queries, v_cap=self.datlas.v_cap)
+        return pack_query_batch(queries, v_cap=self.datlas.v_cap,
+                                vocab_sizes=self.vocab_sizes)
 
     def search(self, queries: list[Query], seed: int = 0):
         """Filtered top-k for a batch: one device dispatch, one host sync.

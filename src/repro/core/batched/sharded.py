@@ -39,6 +39,7 @@ from repro.core.batched.engine import (INF, BatchedParams, pack_query_batch,
                                        search_batch)
 from repro.core.device_atlas import DeviceAtlas, stack_atlases
 from repro.core.graph import build_shard_graphs, stack_adjacency
+from repro.core.predicate import derived_vocab_sizes
 from repro.core.types import Dataset, Query
 from repro.kernels.ops import V_CAP
 from repro.launch.mesh import index_axis_size
@@ -63,6 +64,9 @@ class ShardedIndex:
     valid_bm: jax.Array     # (S, ceil(m/32)) u32 packed row-validity
     datlas: DeviceAtlas     # per-shard atlases, leaves stacked to (S, ...)
     n: int                  # real (unpadded) corpus size
+    # per-field domains for FilterExpr Not/Range lowering (derived from the
+    # unpadded metadata at build time)
+    vocab_sizes: tuple[int, ...] | None = None
 
     @property
     def n_shards(self) -> int:
@@ -122,7 +126,8 @@ def build_sharded_index(vectors: np.ndarray, metadata: np.ndarray,
         metadata=jnp.asarray(meta),
         global_ids=jnp.asarray(gids),
         valid_bm=pack_bits(jnp.asarray(valid)),
-        datlas=stack_atlases(atlases), n=n)
+        datlas=stack_atlases(atlases), n=n,
+        vocab_sizes=derived_vocab_sizes(metadata))
 
 
 def merge_topk(all_v: jax.Array, all_i: jax.Array, k: int):
@@ -170,6 +175,7 @@ class ShardedEngine:
         datlas = jax.tree.map(put, sindex.datlas)
         self._leaves, self._tdef = jax.tree_util.tree_flatten(datlas)
         self.v_cap = sindex.datlas.v_cap
+        self.vocab_sizes = sindex.vocab_sizes
         self.n, self.n_shards = sindex.n, s
         self._search = self._build_program()
         self._ref = jax.jit(
@@ -216,7 +222,8 @@ class ShardedEngine:
         dispatch, one host sync. Stats sum device work over shards (every
         shard walks every query)."""
         del seed
-        q_vecs, fields, allowed = pack_query_batch(queries, v_cap=self.v_cap)
+        q_vecs, fields, allowed = pack_query_batch(
+            queries, v_cap=self.v_cap, vocab_sizes=self.vocab_sizes)
         out = self._search(*self._leaves, self.vectors, self.adjacency,
                            self.metadata, self.global_ids, self.valid_bm,
                            q_vecs, fields, allowed)
@@ -229,7 +236,8 @@ class ShardedEngine:
         device, merged by the same ``merge_topk`` in the same shard order.
         The mesh path must match this bit-for-bit (tested at selectivities
         {0.5, 0.1, 0.02})."""
-        q_vecs, fields, allowed = pack_query_batch(queries, v_cap=self.v_cap)
+        q_vecs, fields, allowed = pack_query_batch(
+            queries, v_cap=self.v_cap, vocab_sizes=self.vocab_sizes)
         per_v, per_i, hops, walks = [], [], 0, 0
         for s in range(self.n_shards):
             datlas = jax.tree_util.tree_unflatten(

@@ -33,18 +33,32 @@ import numpy as np
 
 from repro.core.batched.bitmap import pack_bits
 from repro.core.batched.bitmap import n_words as _n_words
+# sentinel + device-side count derivation live with the kernels that
+# consume the tables; re-exported here next to the packers that emit them
+from repro.kernels.filter_eval import DEAD_DISJUNCT, table_n_disj
 from repro.kernels.ops import V_CAP
 
 NEG = jnp.float32(-3.4e38)
 MEMBER_CAP = 4096  # mirrors AnchorAtlas.cluster_members_matching's cap
 
 
+def _pack_clauses(clauses, fields_row: np.ndarray, allowed_row: np.ndarray,
+                  v_cap: int) -> None:
+    """Write one conjunctive clause list into a (C,) fields row + a
+    (C, Wv) value-bitmap row. Values ≥ v_cap are dropped: no point holds
+    them (the atlas inverted index has no posting), so the clause
+    contributes an empty match, same as the host path."""
+    for ci, (f, vals) in enumerate(clauses):
+        fields_row[ci] = f
+        for v in vals:
+            if 0 <= v < v_cap:
+                allowed_row[ci, v >> 5] |= np.uint32(1) << np.uint32(v & 31)
+
+
 def pack_predicates(preds, *, max_clauses: int | None = None,
                     v_cap: int = V_CAP) -> tuple[np.ndarray, np.ndarray]:
     """FilterPredicates -> clause tables (fields (Q, C) i32, -1 = inactive;
-    allowed (Q, C, ceil(v_cap/32)) u32 value bitmaps). Values ≥ v_cap are
-    dropped: no point holds them (the atlas inverted index has no posting),
-    so the clause contributes an empty match, same as the host path."""
+    allowed (Q, C, ceil(v_cap/32)) u32 value bitmaps)."""
     n_cl = max((p.n_clauses for p in preds), default=0)
     C = max(1, n_cl) if max_clauses is None else max_clauses
     if n_cl > C:
@@ -53,12 +67,40 @@ def pack_predicates(preds, *, max_clauses: int | None = None,
     fields = np.full((Q, C), -1, np.int32)
     allowed = np.zeros((Q, C, _n_words(v_cap)), np.uint32)
     for qi, pred in enumerate(preds):
-        for ci, (f, vals) in enumerate(pred.clauses):
-            fields[qi, ci] = f
-            for v in vals:
-                if 0 <= v < v_cap:
-                    allowed[qi, ci, v >> 5] |= np.uint32(1) << np.uint32(v & 31)
+        _pack_clauses(pred.clauses, fields[qi], allowed[qi], v_cap)
     return fields, allowed
+
+
+def pack_dnf(dnfs, *, max_disjuncts: int | None = None,
+             max_clauses: int | None = None,
+             v_cap: int = V_CAP) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Compiled DNF predicates -> disjunctive clause tables:
+    fields (Q, D, C) i32 (-1 inactive clause, DEAD_DISJUNCT = -2 for the
+    dead-disjunct padding tail), allowed (Q, D, C, ceil(v_cap/32)) u32
+    value bitmaps, n_disj (Q,) i32 per-query live-disjunct counts. Disjunct
+    d of query q is the same conjunctive table ``pack_predicates`` emits
+    (shared ``_pack_clauses``); the kernels OR the per-disjunct pass words
+    (DESIGN.md §8). Live disjuncts pack densely from 0, so ``table_n_disj``
+    recovers the counts on device."""
+    n_dj = max((d.n_disjuncts for d in dnfs), default=0)
+    D = max(1, n_dj) if max_disjuncts is None else max_disjuncts
+    if n_dj > D:
+        raise ValueError(f"predicate has {n_dj} disjuncts > "
+                         f"max_disjuncts={D}")
+    n_cl = max((d.max_clauses for d in dnfs), default=0)
+    C = max(1, n_cl) if max_clauses is None else max_clauses
+    if n_cl > C:
+        raise ValueError(f"disjunct has {n_cl} clauses > max_clauses={C}")
+    Q = len(dnfs)
+    fields = np.full((Q, D, C), DEAD_DISJUNCT, np.int32)
+    allowed = np.zeros((Q, D, C, _n_words(v_cap)), np.uint32)
+    n_disj = np.zeros(Q, np.int32)
+    for qi, dnf in enumerate(dnfs):
+        n_disj[qi] = dnf.n_disjuncts
+        for di, clauses in enumerate(dnf.disjuncts):
+            fields[qi, di, :] = -1
+            _pack_clauses(clauses, fields[qi, di], allowed[qi, di], v_cap)
+    return fields, allowed, n_disj
 
 
 # canonical packer lives in core/batched/bitmap.py; kept under the original
@@ -169,7 +211,15 @@ class DeviceAtlas:
                                 allowed: jax.Array) -> jax.Array:
         """Clause tables -> (Q, K) bool match mask (host matching_clusters
         for every query at once): AND over active clauses of 'cluster has
-        ≥1 point with an allowed value on that field'."""
+        ≥1 point with an allowed value on that field'. Disjunctive (Q, D, C)
+        tables (``pack_dnf``) OR the per-disjunct conjunctive masks, with
+        dead disjuncts contributing False."""
+        if fields.ndim == 3:
+            pres = self.presence[jnp.maximum(fields, 0)]    # (Q, D, C, K, W)
+            hit = ((pres & allowed[..., None, :]) != 0).any(-1)  # (Q, D, C, K)
+            conj = jnp.where((fields >= 0)[..., None], hit, True).all(axis=2)
+            alive = fields[:, :, 0] > DEAD_DISJUNCT         # (Q, D)
+            return (conj & alive[:, :, None]).any(axis=1)
         pres = self.presence[jnp.maximum(fields, 0)]        # (Q, C, K, W)
         hit = ((pres & allowed[:, :, None, :]) != 0).any(-1)  # (Q, C, K)
         return jnp.where((fields >= 0)[:, :, None], hit, True).all(axis=1)

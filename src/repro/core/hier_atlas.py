@@ -14,7 +14,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.atlas import AnchorAtlas
+from repro.core.atlas import AnchorAtlas, _union_over_disjuncts
 from repro.core.kmeans import kmeans
 from repro.core.types import Dataset, FilterPredicate
 
@@ -50,9 +50,9 @@ class HierAtlas:
         return HierAtlas(flat, sup_c, sup_assign.astype(np.int32), members,
                          super_index)
 
-    def matching_supers(self, pred: FilterPredicate) -> np.ndarray:
+    def _matching_supers_conj(self, clauses) -> np.ndarray:
         acc: np.ndarray | None = None
-        for f, allowed in pred.clauses:
+        for f, allowed in clauses:
             idx = self.super_index[f]
             parts = [idx[v] for v in allowed if v in idx]
             cur = (np.unique(np.concatenate(parts)) if parts
@@ -64,6 +64,12 @@ class HierAtlas:
         if acc is None:
             acc = np.arange(len(self.members_of_super), dtype=np.int32)
         return acc
+
+    def matching_supers(self, pred) -> np.ndarray:
+        """Candidate super-clusters for a conjunctive ``FilterPredicate``
+        or a compiled ``DNF`` (union over disjuncts, as in the flat
+        atlas)."""
+        return _union_over_disjuncts(pred, self._matching_supers_conj)
 
     def select_anchors(self, q: np.ndarray, pred: FilterPredicate,
                        processed: set[int], n_seeds: int = 10,

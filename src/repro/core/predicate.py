@@ -1,0 +1,349 @@
+"""Composable filter-expression algebra + bounded-DNF compiler.
+
+The paper fixes predicates to conjunctions of value-sets (§3.1); this
+module is the serving-grade generalization (DESIGN.md §8): an expression
+tree of ``In`` / ``Range`` leaves composed with ``And`` / ``Or`` / ``Not``,
+plus a compiler that normalizes any expression into a *bounded* disjunctive
+normal form — at most ``max_disjuncts`` disjuncts, each a conjunctive
+clause list of the exact shape ``FilterPredicate.clauses`` already has, so
+every disjunct reuses the existing dense clause-table machinery and the
+device kernels only add a small OR-reduction over disjuncts.
+
+Semantics (shared by the numpy oracles here, the lowering, and the device
+kernels — property-tested bit-identical in ``tests/test_predicate.py``):
+
+* a metadata code of ``-1`` means "field not populated" and fails every
+  constraint on that field, **including negated ones** — ``Not`` is the
+  complement within the field's populated domain ``[0, vocab_sizes[f])``,
+  not a boolean flip. This is what makes ``Not``/``Range`` lowerable to
+  plain value-sets (complement / interval) with no new kernel semantics.
+* ``In`` is literal: its values are kept as given (negatives dropped),
+  so high-cardinality codes beyond a default domain still match.
+* ``Range(f, lo, hi)`` is the inclusive interval clipped to the field's
+  domain; open ends (``None``) extend to the domain edge.
+
+``vocab_sizes`` (the per-field domain) is only needed when an expression
+contains ``Not`` or an open-ended ``Range``; when omitted, a field's
+domain defaults to ``DEFAULT_DOMAIN``. Any domain that covers every code
+actually present in the corpus yields the same masks, so engines derive it
+from their metadata (``max+1`` per field) when the dataset's
+``vocab_sizes`` isn't at hand.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+import numpy as np
+
+# fallback per-field domain for Not/Range when no vocab_sizes is given;
+# matches the kernels' default value-bitmap capacity (kernels.ops.V_CAP)
+DEFAULT_DOMAIN = 256
+
+# bound on the disjunctive blow-up: And-over-Or distribution is cut off
+# (ValueError) once a (sub)expression needs more conjunctive clause tables
+# than this. 8 keeps the device tables one power-of-two wider than the
+# common or2/or4 serving shapes while capping worst-case kernel work.
+MAX_DISJUNCTS = 8
+
+Clauses = tuple  # tuple[(field, (values...)), ...] — FilterPredicate shape
+
+
+class FilterExpr:
+    """Base class for filter expression nodes. Compose with ``&``, ``|``,
+    ``~`` or the node constructors directly."""
+
+    def __and__(self, other: "FilterExpr") -> "And":
+        return And(self, other)
+
+    def __or__(self, other: "FilterExpr") -> "Or":
+        return Or(self, other)
+
+    def __invert__(self) -> "Not":
+        return Not(self)
+
+    @staticmethod
+    def never() -> "Or":
+        """Canonical match-nothing expression (0 disjuncts): the inert
+        predicate serving uses for bucket-pad queries."""
+        return Or()
+
+    @staticmethod
+    def always() -> "And":
+        """Canonical match-everything expression (1 empty disjunct)."""
+        return And()
+
+    def mask(self, metadata: np.ndarray,
+             vocab_sizes: Sequence[int] | None = None) -> np.ndarray:
+        """Vectorized corpus-wide pass mask — the numpy oracle every device
+        path is tested bit-identical against."""
+        return _eval(self, np.asarray(metadata), vocab_sizes, neg=False)
+
+    def matches_row(self, row: np.ndarray,
+                    vocab_sizes: Sequence[int] | None = None) -> bool:
+        return bool(self.mask(np.asarray(row)[None, :], vocab_sizes)[0])
+
+
+@dataclasses.dataclass(frozen=True, init=False)
+class In(FilterExpr):
+    """field's code is one of ``values`` (negatives dropped: code -1 means
+    unpopulated and can never match)."""
+
+    field: int
+    values: tuple[int, ...]
+
+    def __init__(self, field: int, values: Iterable[int]):
+        object.__setattr__(self, "field", int(field))
+        object.__setattr__(self, "values",
+                           tuple(sorted({int(v) for v in values
+                                         if int(v) >= 0})))
+
+
+@dataclasses.dataclass(frozen=True, init=False)
+class Range(FilterExpr):
+    """field's code lies in the inclusive interval [lo, hi] ∩ [0, domain);
+    ``None`` ends are open (extend to the domain edge)."""
+
+    field: int
+    lo: int | None
+    hi: int | None
+
+    def __init__(self, field: int, lo: int | None = None,
+                 hi: int | None = None):
+        object.__setattr__(self, "field", int(field))
+        object.__setattr__(self, "lo", None if lo is None else int(lo))
+        object.__setattr__(self, "hi", None if hi is None else int(hi))
+
+
+@dataclasses.dataclass(frozen=True, init=False)
+class And(FilterExpr):
+    children: tuple[FilterExpr, ...]
+
+    def __init__(self, *children: FilterExpr):
+        object.__setattr__(self, "children", tuple(children))
+
+
+@dataclasses.dataclass(frozen=True, init=False)
+class Or(FilterExpr):
+    children: tuple[FilterExpr, ...]
+
+    def __init__(self, *children: FilterExpr):
+        object.__setattr__(self, "children", tuple(children))
+
+
+@dataclasses.dataclass(frozen=True)
+class Not(FilterExpr):
+    child: FilterExpr
+
+
+def _domain(field: int, vocab_sizes: Sequence[int] | None) -> int:
+    if vocab_sizes is not None and field < len(vocab_sizes):
+        return int(vocab_sizes[field])
+    return DEFAULT_DOMAIN
+
+
+def _range_bounds(e: Range, dom: int) -> tuple[int, int]:
+    lo = 0 if e.lo is None else max(int(e.lo), 0)
+    hi = dom - 1 if e.hi is None else min(int(e.hi), dom - 1)
+    return lo, hi
+
+
+def _eval(e: FilterExpr, meta: np.ndarray,
+          vocab_sizes: Sequence[int] | None, neg: bool) -> np.ndarray:
+    """Recursive oracle. ``neg`` pushes negation De-Morgan-style to the
+    leaves, where it becomes the domain complement — exactly the lowering
+    ``compile_to_dnf`` performs, so tree eval and compiled eval agree
+    bit-for-bit by construction."""
+    n = meta.shape[0]
+    if isinstance(e, Not):
+        return _eval(e.child, meta, vocab_sizes, not neg)
+    if isinstance(e, (And, Or)):
+        conj = isinstance(e, And) ^ neg
+        out = np.full(n, conj, dtype=bool)
+        for c in e.children:
+            m = _eval(c, meta, vocab_sizes, neg)
+            out = (out & m) if conj else (out | m)
+        return out
+    col = meta[:, e.field]
+    if isinstance(e, In):
+        m = np.isin(col, np.asarray(e.values, dtype=np.int64))
+    elif isinstance(e, Range):
+        lo, hi = _range_bounds(e, _domain(e.field, vocab_sizes))
+        m = (col >= lo) & (col <= hi)
+    else:
+        raise TypeError(f"not a FilterExpr node: {e!r}")
+    if neg:
+        dom = _domain(e.field, vocab_sizes)
+        m = (col >= 0) & (col < dom) & ~m
+    return m
+
+
+# -- bounded DNF -------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DNF:
+    """Compiled predicate: a union of conjunctive clause lists, each of the
+    exact ``FilterPredicate.clauses`` shape. Zero disjuncts match nothing;
+    one empty disjunct matches everything."""
+
+    disjuncts: tuple[Clauses, ...]
+
+    @property
+    def n_disjuncts(self) -> int:
+        return len(self.disjuncts)
+
+    @property
+    def max_clauses(self) -> int:
+        return max((len(d) for d in self.disjuncts), default=0)
+
+    def mask(self, metadata: np.ndarray,
+             vocab_sizes: Sequence[int] | None = None) -> np.ndarray:
+        """Union over disjuncts of conjunctive isin masks (``vocab_sizes``
+        accepted for interface parity; negation is already lowered)."""
+        del vocab_sizes
+        meta = np.asarray(metadata)
+        out = np.zeros(meta.shape[0], dtype=bool)
+        for clauses in self.disjuncts:
+            m = np.ones(meta.shape[0], dtype=bool)
+            for f, vals in clauses:
+                col = meta[:, f]
+                # col >= 0 guard: unpopulated codes fail every clause even
+                # if a hand-built DNF carries negative values (the device
+                # packers drop them; the oracles must agree)
+                m &= (col >= 0) & np.isin(col,
+                                          np.asarray(vals, dtype=np.int64))
+            out |= m
+        return out
+
+    def matches_row(self, row: np.ndarray,
+                    vocab_sizes: Sequence[int] | None = None) -> bool:
+        return bool(self.mask(np.asarray(row)[None, :], vocab_sizes)[0])
+
+    def to_predicate(self):
+        """Lower a ≤1-disjunct DNF to a plain conjunctive FilterPredicate
+        (0 disjuncts become the canonical match-nothing clause), so purely
+        conjunctive batches keep the legacy clause-table shape and its
+        compiled programs."""
+        from repro.core.types import FilterPredicate
+        if self.n_disjuncts == 0:
+            return FilterPredicate(((0, ()),))
+        if self.n_disjuncts == 1:
+            return FilterPredicate(tuple(self.disjuncts[0]))
+        raise ValueError(
+            f"DNF with {self.n_disjuncts} disjuncts is not conjunctive")
+
+
+def _leaf_values(e: FilterExpr, neg: bool,
+                 vocab_sizes: Sequence[int] | None) -> frozenset[int]:
+    dom = _domain(e.field, vocab_sizes)
+    if isinstance(e, In):
+        base = frozenset(e.values)
+    elif isinstance(e, Range):
+        lo, hi = _range_bounds(e, dom)
+        base = frozenset(range(lo, hi + 1)) if hi >= lo else frozenset()
+    else:
+        raise TypeError(f"not a FilterExpr leaf: {e!r}")
+    return frozenset(range(dom)) - base if neg else base
+
+
+def _merge_conj(a: dict, b: dict) -> dict | None:
+    """AND of two conjuncts: intersect same-field value sets; ``None`` if
+    any intersection is empty (the combined disjunct is unsatisfiable)."""
+    out = dict(a)
+    for f, vs in b.items():
+        inter = (out[f] & vs) if f in out else vs
+        if not inter:
+            return None
+        out[f] = inter
+    return out
+
+
+def _dedupe(disjuncts: list[dict]) -> list[dict]:
+    seen, out = set(), []
+    for d in disjuncts:
+        key = frozenset(d.items())
+        if key not in seen:
+            seen.add(key)
+            out.append(d)
+    return out
+
+
+def _lower(e: FilterExpr, neg: bool, vocab_sizes: Sequence[int] | None,
+           cap: int) -> list[dict]:
+    if isinstance(e, Not):
+        return _lower(e.child, not neg, vocab_sizes, cap)
+    if isinstance(e, (And, Or)):
+        conj = isinstance(e, And) ^ neg
+        parts = [_lower(c, neg, vocab_sizes, cap) for c in e.children]
+        if conj:
+            acc: list[dict] = [{}]
+            for p in parts:
+                nxt = []
+                for a in acc:
+                    for b in p:
+                        m = _merge_conj(a, b)
+                        if m is not None:
+                            nxt.append(m)
+                acc = _dedupe(nxt)
+                if len(acc) > cap:
+                    raise ValueError(
+                        f"expression needs {len(acc)} disjuncts > "
+                        f"max_disjuncts={cap}; simplify the predicate or "
+                        f"raise the bound")
+            return acc
+        out: list[dict] = []
+        for p in parts:
+            out.extend(p)
+        out = _dedupe(out)
+        if any(not d for d in out):   # an unconstrained disjunct absorbs all
+            return [{}]
+        if len(out) > cap:
+            raise ValueError(
+                f"expression needs {len(out)} disjuncts > "
+                f"max_disjuncts={cap}; simplify the predicate or raise "
+                f"the bound")
+        return out
+    vals = _leaf_values(e, neg, vocab_sizes)
+    return [] if not vals else [{e.field: vals}]
+
+
+def compile_to_dnf(expr, vocab_sizes: Sequence[int] | None = None, *,
+                   max_disjuncts: int = MAX_DISJUNCTS) -> DNF:
+    """Normalize any ``FilterExpr`` (or FilterPredicate / DNF) to a bounded
+    DNF: ``Not``/``Range`` lower to complement/interval value-sets against
+    ``vocab_sizes``, ``And`` distributes over ``Or`` with unsatisfiable
+    disjuncts dropped and duplicates merged, and the disjunct count is
+    capped at ``max_disjuncts`` (ValueError beyond)."""
+    if isinstance(expr, DNF):
+        return expr
+    if not isinstance(expr, FilterExpr):
+        clauses = getattr(expr, "clauses", None)  # FilterPredicate
+        if clauses is None:
+            raise TypeError(f"cannot compile {type(expr).__name__} to DNF")
+        # drop negative values on wrap: they can never match (code -1 means
+        # unpopulated), and the device packers skip them too
+        return DNF((tuple((f, tuple(v for v in vals if v >= 0))
+                          for f, vals in clauses),))
+    disjuncts = _lower(expr, False, vocab_sizes, max_disjuncts)
+    return DNF(tuple(
+        tuple(sorted((f, tuple(sorted(vs))) for f, vs in d.items()))
+        for d in disjuncts))
+
+
+def as_dnf(pred, vocab_sizes: Sequence[int] | None = None, *,
+           max_disjuncts: int = MAX_DISJUNCTS) -> DNF:
+    """Uniform entry point for every layer that consumes predicates:
+    DNF passes through, FilterPredicate wraps as its single disjunct
+    (verbatim — no simplification, so legacy clause tables stay
+    byte-identical), FilterExpr compiles."""
+    return compile_to_dnf(pred, vocab_sizes, max_disjuncts=max_disjuncts)
+
+
+def derived_vocab_sizes(metadata: np.ndarray) -> tuple[int, ...]:
+    """Per-field domain derived from observed codes (``max+1``). Any domain
+    covering every present code yields identical masks, so this is a safe
+    stand-in when the dataset's declared ``vocab_sizes`` isn't available."""
+    meta = np.asarray(metadata)
+    if meta.size == 0:
+        return tuple(0 for _ in range(meta.shape[1]))
+    return tuple(int(c) + 1 for c in meta.max(axis=0))

@@ -12,6 +12,7 @@ import numpy as np
 
 from repro.core.atlas import AnchorAtlas
 from repro.core.graph import Graph
+from repro.core.predicate import FilterExpr, as_dnf, derived_vocab_sizes
 from repro.core.types import FilterPredicate, Query, SearchStats
 from repro.core.walk_beam import beam_walk
 from repro.core.walk_common import WalkContext
@@ -44,13 +45,30 @@ class FiberIndex:
     graph: Graph
     atlas: AnchorAtlas
 
+    def vocab_sizes(self) -> tuple[int, ...]:
+        """Per-field domains for FilterExpr Not/Range lowering, derived
+        from the metadata once and memoized (it is an index invariant)."""
+        vs = getattr(self, "_vocab_sizes", None)
+        if vs is None:
+            vs = derived_vocab_sizes(self.metadata)
+            self._vocab_sizes = vs
+        return vs
 
-def search(index: FiberIndex, q: np.ndarray, pred: FilterPredicate,
+
+def search(index: FiberIndex, q: np.ndarray,
+           pred: "FilterPredicate | FilterExpr",
            params: SearchParams = SearchParams(),
            gt_ids: np.ndarray | None = None,
            seed: int = 0) -> tuple[np.ndarray, np.ndarray, SearchStats]:
-    """Approximate filtered top-k of q. Returns (ids, sims, stats)."""
+    """Approximate filtered top-k of q. Returns (ids, sims, stats).
+
+    ``pred`` may be a conjunctive ``FilterPredicate`` or any ``FilterExpr``
+    — expressions compile to a bounded DNF (Not/Range lowered against the
+    domains observed in the index metadata) and the atlas unions candidate
+    clusters/members over the disjuncts."""
     rng = np.random.default_rng(seed)
+    if isinstance(pred, FilterExpr):
+        pred = as_dnf(pred, index.vocab_sizes())
     passes = pred.mask(index.metadata)
     results: dict[int, float] = {}
     processed: set[int] = set()

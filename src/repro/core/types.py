@@ -3,14 +3,20 @@
 A *dataset* is a unit-normalized vector table plus integer-coded categorical
 metadata. A *filter predicate* is a conjunction over fields, each field
 restricted to a set of allowed codes (paper §3.1); single-value equality is
-the common case.
+the common case. General boolean filters (Or / Not / Range) live in
+``core.predicate`` as the ``FilterExpr`` algebra; ``FilterPredicate`` is the
+conjunctive compatibility alias — a single-disjunct expression — and its
+numpy oracles delegate to the expression tree (DESIGN.md §8).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Mapping, Sequence
 
 import numpy as np
+
+from repro.core.predicate import And, FilterExpr, In
 
 
 @dataclasses.dataclass
@@ -44,12 +50,20 @@ class Dataset:
         return self.metadata.shape[1]
 
 
+@functools.lru_cache(maxsize=1024)
+def _pred_expr(clauses: tuple) -> FilterExpr:
+    return And(*(In(f, vals) for f, vals in clauses))
+
+
 @dataclasses.dataclass(frozen=True)
 class FilterPredicate:
     """Conjunctive predicate: field -> allowed value codes (paper §3.1).
 
     ``clauses`` maps field index to a tuple of allowed codes. A point passes
-    when every constrained field's code is in the allowed set.
+    when every constrained field's code is in the allowed set. This is the
+    thin compatibility alias over the ``core.predicate`` algebra: it is
+    exactly the single-disjunct expression ``And(In(f, vals), ...)`` and
+    its numpy oracles evaluate that tree.
     """
 
     clauses: tuple[tuple[int, tuple[int, ...]], ...]
@@ -70,28 +84,33 @@ class FilterPredicate:
     def n_clauses(self) -> int:
         return len(self.clauses)
 
-    def matches_row(self, row: np.ndarray) -> bool:
-        """O(|S|) per-node membership check (paper §5.3)."""
+    def expr(self) -> FilterExpr:
+        """The predicate as a ``FilterExpr`` tree (single conjunction)."""
+        return _pred_expr(self.clauses)
+
+    def matches_row(self, row: np.ndarray,
+                    vocab_sizes: Sequence[int] | None = None) -> bool:
+        """O(|S|) per-node membership check (paper §5.3). Inline loop kept
+        for the per-candidate hot path (HNSW baselines); bit-identical to
+        ``self.expr().matches_row`` — a code of -1 fails every clause."""
+        del vocab_sizes
         for f, allowed in self.clauses:
-            if int(row[f]) not in allowed:
+            v = int(row[f])
+            if v < 0 or v not in allowed:
                 return False
         return True
 
-    def mask(self, metadata: np.ndarray) -> np.ndarray:
+    def mask(self, metadata: np.ndarray,
+             vocab_sizes: Sequence[int] | None = None) -> np.ndarray:
         """Vectorized corpus-wide pass mask (the per-query bitmap precompute
         used by the batched engine; semantics identical to matches_row)."""
-        out = np.ones(metadata.shape[0], dtype=bool)
-        for f, allowed in self.clauses:
-            col = metadata[:, f]
-            m = np.isin(col, np.asarray(allowed, dtype=col.dtype))
-            out &= m
-        return out
+        return self.expr().mask(metadata, vocab_sizes)
 
 
 @dataclasses.dataclass
 class Query:
     vector: np.ndarray            # (d,) unit-norm
-    predicate: FilterPredicate
+    predicate: "FilterPredicate | FilterExpr"
     gt_ids: np.ndarray | None = None      # ground-truth filtered top-k ids
     gt_sims: np.ndarray | None = None
     selectivity: float = float("nan")

@@ -22,9 +22,11 @@ def filtered_topk(vectors: np.ndarray, q: np.ndarray, passes: np.ndarray,
 
 def attach_ground_truth(ds: Dataset, queries: list[Query], k: int = 25,
                         block: int = 4096) -> None:
-    """Compute exact filtered top-k for each query in place."""
+    """Compute exact filtered top-k for each query in place. The pass mask
+    is the predicate's expression-tree oracle; the dataset's declared
+    vocabularies supply the Not/Range domains for FilterExpr queries."""
     for q in queries:
-        passes = q.predicate.mask(ds.metadata)
+        passes = q.predicate.mask(ds.metadata, ds.vocab_sizes)
         q.gt_ids, q.gt_sims = filtered_topk(ds.vectors, q.vector, passes, k)
 
 

@@ -17,6 +17,7 @@ import dataclasses
 
 import numpy as np
 
+from repro.core.predicate import In, Or
 from repro.core.types import Dataset, FilterPredicate, Query, normalize
 
 
@@ -103,6 +104,56 @@ def make_selectivity_queries(ds: Dataset, sel_code: int, n_queries: int, *,
     pred = FilterPredicate.make({0: [sel_code]})
     members = np.nonzero(ds.metadata[:, 0] == sel_code)[0]
     sel = float(pred.mask(ds.metadata).mean())
+    out = []
+    for _ in range(n_queries):
+        src = members[rng.integers(members.size)]
+        qv = normalize(ds.vectors[src] + 0.15 * rng.standard_normal(ds.d))
+        out.append(Query(vector=qv, predicate=pred, selectivity=sel))
+    return out
+
+
+def add_or_pair_fields(ds: Dataset, sels=(0.1, 0.02), *,
+                       seed: int = 23) -> Dataset:
+    """Append two independent fields ``orA``/``orB`` with engineered
+    marginals: code ``i+1`` selects fraction ``sels[i]/2`` on each field,
+    so the two-field disjunction ``Or(In(orA, [i+1]), In(orB, [i+1]))``
+    has selectivity ≈ ``sels[i]`` (minus the tiny independent overlap).
+    The base dataset's fields are untouched, so conjunctive fixtures and
+    benchmark rows keep their distribution."""
+    rng = np.random.default_rng(seed)
+    n = ds.n
+    cols = []
+    probs = np.asarray(sels, dtype=np.float64) / 2.0
+    edges = np.concatenate([np.cumsum(probs), [1.0]])
+    for _ in range(2):
+        draw = rng.random(n)
+        code = np.searchsorted(edges, draw, side="right") + 1
+        code[draw >= edges[-2]] = 0          # bulk: code 0 (matches nothing)
+        cols.append(code.astype(np.int32))
+    metadata = np.concatenate([ds.metadata, np.stack(cols, axis=1)], axis=1)
+    return Dataset(ds.vectors, metadata,
+                   ds.field_names + ["orA", "orB"],
+                   ds.vocab_sizes + [len(sels) + 1, len(sels) + 1])
+
+
+def or_pair_predicate(ds: Dataset, code: int) -> Or:
+    """The two-field disjunction over an ``add_or_pair_fields`` dataset."""
+    fa, fb = ds.field_names.index("orA"), ds.field_names.index("orB")
+    return Or(In(fa, [code]), In(fb, [code]))
+
+
+def make_or_queries(ds: Dataset, code: int, n_queries: int, *,
+                    seed: int = 5) -> list[Query]:
+    """Queries near corpus points passing the or-pair disjunction for
+    ``code`` (so recall is attainable), mirroring
+    ``make_selectivity_queries`` for the disjunctive benchmark rows."""
+    rng = np.random.default_rng(seed + code)
+    pred = or_pair_predicate(ds, code)
+    passes = pred.mask(ds.metadata, ds.vocab_sizes)
+    members = np.nonzero(passes)[0]
+    if members.size == 0:
+        raise ValueError(f"no corpus rows match or-pair code {code}")
+    sel = float(passes.mean())
     out = []
     for _ in range(n_queries):
         src = members[rng.integers(members.size)]

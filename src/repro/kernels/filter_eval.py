@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: conjunctive-predicate evaluation -> packed bitmap.
+"""Pallas TPU kernel: predicate evaluation -> packed bitmap.
 
 Turns (metadata codes x predicate) into the per-query filter bitmap consumed
 by the other kernels and the batched engine. The paper's per-node O(|S|)
@@ -6,6 +6,13 @@ dict lookup becomes a corpus-sweep VPU pass (DESIGN.md §3): per tile of
 rows, each clause tests membership via an iota-compare against a dense
 allowed-value table (no gathers — TPU-friendly), and the pass bools pack
 into uint32 words with a shift-weighted row sum.
+
+Disjunctive predicates (DESIGN.md §8) ride the same sweep: a (Q, D, C)
+clause table holds D conjunctive disjuncts per query, and the kernel ORs
+the per-disjunct pass vectors before packing — the per-query live-disjunct
+count gates the padding tail, so the union never admits a dead disjunct.
+``filter_eval_batch`` dispatches on table rank, keeping the conjunctive
+(Q, C) program byte-identical for existing callers.
 """
 from __future__ import annotations
 
@@ -14,6 +21,18 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+# disjunct-table sentinel (shared with the packers in core.device_atlas):
+# a fields entry of -1 is an inactive clause inside a live disjunct
+# (conjunction over nothing = pass), DEAD_DISJUNCT marks the padding tail
+# of dead disjuncts (contributes False to the union). Live disjuncts pack
+# densely from 0, so the per-query count is recoverable from the table.
+DEAD_DISJUNCT = -2
+
+
+def table_n_disj(fields: jax.Array) -> jax.Array:
+    """(Q, D, C) fields table -> (Q,) i32 live-disjunct counts (jittable)."""
+    return jnp.sum(fields[:, :, 0] > DEAD_DISJUNCT, axis=1).astype(jnp.int32)
 
 
 def _kernel(meta_ref, fields_ref, allowed_ref, out_ref, *, n_clauses: int,
@@ -63,24 +82,60 @@ def _batch_kernel(meta_ref, fields_ref, allowed_ref, out_ref, *,
     out_ref[...] = jnp.sum(bits * weights, axis=1).reshape(1, tn // 32)
 
 
+def _dnf_batch_kernel(meta_ref, fields_ref, allowed_ref, ndisj_ref, out_ref,
+                      *, n_disjuncts: int, n_clauses: int, v_cap: int):
+    """Per-(query, corpus-tile) program for disjunctive clause tables:
+    the ``_batch_kernel`` conjunction evaluated per disjunct, with the
+    per-disjunct pass vectors OR-reduced in-register before packing. The
+    per-query live-disjunct count gates the table's padding tail."""
+    meta = meta_ref[...]                       # (Tn, F) int32
+    tn = meta.shape[0]
+    viota = jax.lax.broadcasted_iota(jnp.int32, (tn, v_cap), 1)
+    nd = ndisj_ref[0, 0]
+    ok = jnp.zeros((tn,), jnp.bool_)
+    for dd in range(n_disjuncts):              # static, small (<= D_cap)
+        alive = jnp.int32(dd) < nd
+        ok_d = jnp.ones((tn,), jnp.bool_)
+        for c in range(n_clauses):             # static, small (<= 4 clauses)
+            f = fields_ref[0, dd, c]
+            active = f >= 0
+            col = jax.lax.dynamic_index_in_dim(meta, jnp.maximum(f, 0),
+                                               axis=1, keepdims=False)
+            hit_tbl = allowed_ref[0, dd, c, :] > 0            # (v_cap,)
+            eq = viota == col[:, None]
+            clause_ok = jnp.any(eq & hit_tbl[None, :], axis=1)
+            clause_ok &= (col >= 0) & (col < v_cap)
+            ok_d = jnp.where(active, ok_d & clause_ok, ok_d)
+        ok = ok | (ok_d & alive)
+    bits = ok.reshape(tn // 32, 32).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jax.lax.broadcasted_iota(
+        jnp.uint32, (tn // 32, 32), 1))
+    out_ref[...] = jnp.sum(bits * weights, axis=1).reshape(1, tn // 32)
+
+
 @functools.partial(jax.jit, static_argnames=("tn", "interpret"))
-def filter_eval_batch(metadata, fields, allowed, *, tn: int = 1024,
-                      interpret: bool = True):
+def filter_eval_batch(metadata, fields, allowed, n_disj=None, *,
+                      tn: int = 1024, interpret: bool = True):
     """Batched corpus sweep: metadata (n, F) i32; fields (Q, C) i32 (-1
     inactive); allowed (Q, C, ceil(v_cap/32)) uint32 value bitmaps (the
     ``pack_predicates`` clause-table format) -> (Q, ceil(n/32)) uint32.
 
+    Disjunctive form (``pack_dnf`` tables): fields (Q, D, C) i32 (-2 = dead
+    disjunct) with allowed (Q, D, C, ceil(v_cap/32)) and n_disj (Q,) i32
+    live-disjunct counts (derived from the sentinel when omitted); the
+    per-query bitmap is the union over live disjuncts of their conjunctive
+    bitmaps, still one corpus sweep.
+
     The packed value bitmaps are expanded to the dense per-value tables the
-    iota-compare kernel consumes outside the kernel (tiny: Q*C*v_cap bytes);
-    the grid is (Q, corpus tiles). Pad bits beyond n are forced to 0 so the
-    output matches ``ref.filter_eval_batch`` bit-exactly even for
+    iota-compare kernel consumes outside the kernel (tiny: Q*D*C*v_cap
+    bytes); the grid is (corpus tiles, Q). Pad bits beyond n are forced to
+    0 so the output matches ``ref.filter_eval_batch`` bit-exactly even for
     unconstrained predicates."""
     n, F = metadata.shape
-    q_n, C = fields.shape
+    q_n = fields.shape[0]
     v_cap = allowed.shape[-1] * 32
     shifts = jnp.arange(32, dtype=jnp.uint32)
     dense = ((allowed[..., None] >> shifts) & jnp.uint32(1)).astype(jnp.uint8)
-    dense = dense.reshape(q_n, C, v_cap)
     n_pad = (-n) % tn
     # padded rows get code -1 -> fail all active clauses -> bit 0
     meta_p = jnp.pad(metadata, ((0, n_pad), (0, 0)), constant_values=-1)
@@ -88,18 +143,43 @@ def filter_eval_batch(metadata, fields, allowed, *, tn: int = 1024,
     # then constant across the inner q sweep, so Pallas re-DMAs only the
     # few-KB clause tables per step instead of the corpus tile per query
     grid = ((n + n_pad) // tn, q_n)
-    out = pl.pallas_call(
-        functools.partial(_batch_kernel, n_clauses=C, v_cap=v_cap),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((tn, F), lambda i, q: (i, 0)),
-            pl.BlockSpec((1, C), lambda i, q: (q, 0)),
-            pl.BlockSpec((1, C, v_cap), lambda i, q: (q, 0, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, tn // 32), lambda i, q: (q, i)),
-        out_shape=jax.ShapeDtypeStruct((q_n, (n + n_pad) // 32), jnp.uint32),
-        interpret=interpret,
-    )(meta_p, fields, dense)
+    if fields.ndim == 3:
+        D, C = fields.shape[1], fields.shape[2]
+        if n_disj is None:
+            n_disj = table_n_disj(fields)
+        dense = dense.reshape(q_n, D, C, v_cap)
+        out = pl.pallas_call(
+            functools.partial(_dnf_batch_kernel, n_disjuncts=D, n_clauses=C,
+                              v_cap=v_cap),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((tn, F), lambda i, q: (i, 0)),
+                pl.BlockSpec((1, D, C), lambda i, q: (q, 0, 0)),
+                pl.BlockSpec((1, D, C, v_cap), lambda i, q: (q, 0, 0, 0)),
+                pl.BlockSpec((1, 1), lambda i, q: (q, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, tn // 32), lambda i, q: (q, i)),
+            out_shape=jax.ShapeDtypeStruct((q_n, (n + n_pad) // 32),
+                                           jnp.uint32),
+            interpret=interpret,
+        )(meta_p, fields, dense,
+          n_disj.astype(jnp.int32).reshape(q_n, 1))
+    else:
+        C = fields.shape[1]
+        dense = dense.reshape(q_n, C, v_cap)
+        out = pl.pallas_call(
+            functools.partial(_batch_kernel, n_clauses=C, v_cap=v_cap),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((tn, F), lambda i, q: (i, 0)),
+                pl.BlockSpec((1, C), lambda i, q: (q, 0)),
+                pl.BlockSpec((1, C, v_cap), lambda i, q: (q, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, tn // 32), lambda i, q: (q, i)),
+            out_shape=jax.ShapeDtypeStruct((q_n, (n + n_pad) // 32),
+                                           jnp.uint32),
+            interpret=interpret,
+        )(meta_p, fields, dense)
     w = (n + 31) // 32
     out = out[:, :w]
     tail = n - 32 * (w - 1)

@@ -47,8 +47,9 @@ def filter_eval(metadata, fields, allowed, *, tn: int = 1024):
                         interpret=_interpret())
 
 
-def filter_eval_batch(metadata, fields, allowed, *, tn: int = 1024):
-    return _filter_eval_batch(metadata, fields, allowed, tn=tn,
+def filter_eval_batch(metadata, fields, allowed, n_disj=None, *,
+                      tn: int = 1024):
+    return _filter_eval_batch(metadata, fields, allowed, n_disj, tn=tn,
                               interpret=_interpret())
 
 

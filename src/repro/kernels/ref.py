@@ -13,7 +13,9 @@ Semantics contract shared by kernel and oracle:
   code -1 (unpopulated) fails any clause on that field.
 * filter_eval_batch: filter_eval for Q queries at once, consuming the
   pack_predicates clause tables (fields (Q, C) i32; allowed (Q, C, Wv)
-  uint32 value bitmaps) -> (Q, ceil(n/32)) uint32.
+  uint32 value bitmaps) -> (Q, ceil(n/32)) uint32. Disjunctive (Q, D, C)
+  pack_dnf tables OR the per-disjunct conjunctive bitmaps (dead-disjunct
+  padding, marked with field sentinel -2, contributes nothing).
 """
 from __future__ import annotations
 
@@ -100,12 +102,9 @@ def filter_eval(metadata: jax.Array, fields: jax.Array, allowed: jax.Array):
     return (bits * weights).sum(axis=1).astype(jnp.uint32)
 
 
-def filter_eval_batch(metadata: jax.Array, fields: jax.Array,
-                      allowed: jax.Array):
-    """metadata (n, F) i32; fields (Q, C) i32 (-1 = inactive clause);
-    allowed (Q, C, ceil(v_cap/32)) uint32 value bitmaps (the
-    ``pack_predicates`` clause-table format). Returns (Q, ceil(n/32))
-    uint32 packed pass bitmaps; pad bits beyond n are 0."""
+def _conj_ok(metadata: jax.Array, fields: jax.Array, allowed: jax.Array):
+    """(Q, n) bool conjunction for one clause-table slice: fields (Q, C)
+    i32, allowed (Q, C, Wv) uint32 value bitmaps."""
     n = metadata.shape[0]
     q_n, n_clauses = fields.shape
     v_cap = allowed.shape[-1] * 32
@@ -119,6 +118,33 @@ def filter_eval_batch(metadata: jax.Array, fields: jax.Array,
         bit = ((words >> (safe & 31).astype(jnp.uint32)) & 1).astype(bool)
         clause_ok = bit & (vals >= 0) & (vals < v_cap)
         ok = jnp.where((f >= 0)[:, None], ok & clause_ok, ok)
+    return ok
+
+
+def filter_eval_batch(metadata: jax.Array, fields: jax.Array,
+                      allowed: jax.Array, n_disj: jax.Array | None = None):
+    """metadata (n, F) i32; fields (Q, C) i32 (-1 = inactive clause);
+    allowed (Q, C, ceil(v_cap/32)) uint32 value bitmaps (the
+    ``pack_predicates`` clause-table format). Returns (Q, ceil(n/32))
+    uint32 packed pass bitmaps; pad bits beyond n are 0.
+
+    Disjunctive form (the ``pack_dnf`` tables): fields (Q, D, C) i32
+    (-2 = dead-disjunct padding), allowed (Q, D, C, Wv), n_disj (Q,) i32
+    live-disjunct counts (derived from the sentinel when omitted); the
+    bitmap is the union over live disjuncts of conjunctive bitmaps."""
+    n = metadata.shape[0]
+    q_n = fields.shape[0]
+    if fields.ndim == 3:
+        D = fields.shape[1]
+        if n_disj is None:
+            from repro.kernels.filter_eval import table_n_disj
+            n_disj = table_n_disj(fields)
+        ok = jnp.zeros((q_n, n), bool)
+        for d in range(D):
+            ok_d = _conj_ok(metadata, fields[:, d, :], allowed[:, d, :, :])
+            ok = ok | (ok_d & (d < n_disj)[:, None])
+    else:
+        ok = _conj_ok(metadata, fields, allowed)
     pad = (-n) % 32
     okp = jnp.pad(ok, ((0, 0), (0, pad)))
     bits = okp.reshape(q_n, -1, 32).astype(jnp.uint32)

@@ -17,6 +17,7 @@ from repro.core.atlas import AnchorAtlas
 from repro.core.batched.engine import BatchedEngine, BatchedParams
 from repro.core.batched.sharded import ShardedEngine, build_sharded_index
 from repro.core.graph import build_alpha_knn
+from repro.core.predicate import FilterExpr
 from repro.core.search import FiberIndex, SearchParams, search
 from repro.core.types import Dataset, FilterPredicate, Query, normalize
 from repro.launch.mesh import index_axis_size
@@ -104,8 +105,15 @@ class RetrievalService:
         BatchedEngine for custom lockstep beams."""
         if self._engine is None:
             self._engine = BatchedEngine(self._global_index(),
-                                         self._batched_params())
+                                         self._batched_params(),
+                                         vocab_sizes=self._vocab_sizes())
         return self._engine
+
+    def _vocab_sizes(self):
+        """Per-field domains for FilterExpr Not/Range lowering: the
+        dataset's declared vocabularies when the service was built from a
+        Dataset, else derived from the index metadata by the engine."""
+        return self._ds.vocab_sizes if self._ds is not None else None
 
     def _batched_params(self) -> BatchedParams:
         p = self.params
@@ -134,21 +142,28 @@ class RetrievalService:
         return self._sharded
 
     def query_batch(self, vectors: np.ndarray,
-                    predicates: list[FilterPredicate], *,
+                    predicates: "list[FilterPredicate | FilterExpr]", *,
                     bucket: bool = True):
         """Batched filtered retrieval: the whole batch is ONE device
         dispatch (fused predicate eval + restart loop + lockstep walks),
         routed to the sharded engine when the service's mesh partitions the
-        corpus over >1 device.
+        corpus over >1 device. Predicates may be conjunctive
+        ``FilterPredicate``s or arbitrary ``FilterExpr`` trees (compiled to
+        bounded DNF on pack; DESIGN.md §8).
 
         With ``bucket`` (default), the batch is padded to the next
         power-of-two — and at least ``MIN_BUCKET``, so singleton arrivals
         share the smallest bucket's program instead of compiling their own
-        — with inert dummy queries (zero vector, match-nothing predicate:
+        — with inert dummy queries (zero vector, ``FilterExpr.never()``:
         they never seed, walk, or affect the loop); results are sliced back
         to the real queries. An empty batch returns ``([], {})`` without
         touching the engine. Returns (list of id arrays, stats dict)."""
-        q_real = min(len(vectors), len(predicates))
+        if len(vectors) != len(predicates):
+            raise ValueError(
+                f"query_batch got {len(vectors)} vectors but "
+                f"{len(predicates)} predicates; one predicate per query "
+                f"vector is required")
+        q_real = len(predicates)
         if q_real == 0:
             return [], {}
         queries = [Query(vector=v, predicate=p)
@@ -157,7 +172,7 @@ class RetrievalService:
             target = max(MIN_BUCKET, 1 << (q_real - 1).bit_length())
             if target > q_real:
                 dummy = Query(vector=np.zeros_like(queries[0].vector),
-                              predicate=FilterPredicate.make({0: []}))
+                              predicate=FilterExpr.never())
                 queries = queries + [dummy] * (target - q_real)
         eng = (self.sharded_engine() if self._mesh_shards() > 1
                else self.engine())

@@ -1,0 +1,195 @@
+"""Predicate algebra (ISSUE 4): compile_to_dnf must be bit-identical to
+direct expression-tree evaluation over random nested expressions, the
+bounded-DNF invariants must hold, and FilterPredicate must stay the exact
+single-conjunction alias."""
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container without hypothesis: deterministic shim
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.core.device_atlas import pack_dnf, table_n_disj
+from repro.core.predicate import (DNF, MAX_DISJUNCTS, And, FilterExpr, In,
+                                  Not, Or, Range, as_dnf, compile_to_dnf,
+                                  derived_vocab_sizes)
+from repro.core.types import FilterPredicate
+
+F = 4
+VOCAB = [7, 7, 7, 7]
+
+
+@st.composite
+def expr_tree(draw, max_depth: int = 4):
+    """Random expression over F fields: nested And/Or/Not over In/Range
+    leaves, depth ≤ max_depth. Leaf values intentionally include codes at
+    and beyond the vocab edge (domain clipping must stay consistent)."""
+    def leaf():
+        if draw(st.integers(0, 2)) == 2:
+            f = draw(st.integers(0, F - 1))
+            lo = draw(st.integers(-1, 8))
+            hi = draw(st.integers(-1, 8))
+            return Range(f, lo, hi)
+        f = draw(st.integers(0, F - 1))
+        vals = draw(st.lists(st.integers(0, 8), min_size=0, max_size=4))
+        return In(f, vals)
+
+    def node(depth):
+        kind = draw(st.integers(0, 3)) if depth > 0 else 4
+        if kind == 0:
+            return Not(node(depth - 1))
+        if kind in (1, 2):
+            cls = And if kind == 1 else Or
+            n_kids = draw(st.integers(0, 2))
+            return cls(*[node(depth - 1) for _ in range(n_kids)])
+        return leaf()
+
+    return node(draw(st.integers(1, max_depth)))
+
+
+@st.composite
+def meta_and_expr(draw):
+    n = draw(st.integers(4, 80))
+    meta = draw(st.lists(
+        st.lists(st.integers(-1, 8), min_size=F, max_size=F),
+        min_size=n, max_size=n))
+    return np.asarray(meta, np.int32), draw(expr_tree())
+
+
+@given(meta_and_expr())
+@settings(max_examples=120, deadline=None)
+def test_compile_matches_tree_eval(me):
+    """The tentpole property: compile_to_dnf(e).mask == direct tree eval,
+    bit-identical, for random nested And/Or/Not/Range expressions."""
+    meta, expr = me
+    try:
+        dnf = compile_to_dnf(expr, VOCAB, max_disjuncts=64)
+    except ValueError:
+        return  # disjunct bound exceeded: loud, not wrong
+    got = dnf.mask(meta)
+    want = expr.mask(meta, VOCAB)
+    np.testing.assert_array_equal(got, want)
+    assert dnf.n_disjuncts <= 64
+    # matches_row agrees with mask on every row
+    for i in range(0, meta.shape[0], 7):
+        assert dnf.matches_row(meta[i]) == bool(want[i])
+
+
+@given(meta_and_expr())
+@settings(max_examples=40, deadline=None)
+def test_pack_dnf_tables_roundtrip(me):
+    """pack_dnf's sentinel encoding: dense live prefix, -2 padding tail,
+    table_n_disj recovers the per-query counts."""
+    import jax.numpy as jnp
+    meta, expr = me
+    del meta
+    try:
+        dnf = compile_to_dnf(expr, VOCAB)
+    except ValueError:
+        return
+    fields, allowed, n_disj = pack_dnf([dnf, DNF(()), DNF(((),))], v_cap=32)
+    assert fields.shape[:2] == allowed.shape[:2]
+    np.testing.assert_array_equal(n_disj, [dnf.n_disjuncts, 0, 1])
+    np.testing.assert_array_equal(np.asarray(table_n_disj(
+        jnp.asarray(fields))), n_disj)
+    # dead tail is all sentinel; live rows carry no sentinel
+    for qi, nd in enumerate(n_disj):
+        assert (fields[qi, nd:, :] == -2).all()
+        assert (fields[qi, :nd, :] >= -1).all()
+
+
+def test_never_always_and_operators():
+    assert compile_to_dnf(FilterExpr.never()).n_disjuncts == 0
+    assert compile_to_dnf(FilterExpr.always()).disjuncts == ((),)
+    meta = np.asarray([[0, 1], [2, -1], [1, 1]], np.int32)
+    assert not FilterExpr.never().mask(meta).any()
+    assert FilterExpr.always().mask(meta).all()
+    # operator sugar builds the same nodes
+    e = (In(0, [1]) | In(1, [1])) & ~In(0, [2])
+    assert isinstance(e, And)
+    d = compile_to_dnf(e, [3, 3])
+    np.testing.assert_array_equal(d.mask(meta), e.mask(meta, [3, 3]))
+
+
+def test_not_is_domain_complement_not_boolean_flip():
+    """A code of -1 (unpopulated) fails In AND its negation — the rule
+    that makes Not lowerable to complement value-sets."""
+    meta = np.asarray([[-1], [0], [1], [2]], np.int32)
+    e, ne = In(0, [1]), Not(In(0, [1]))
+    np.testing.assert_array_equal(e.mask(meta, [3]),
+                                  [False, False, True, False])
+    np.testing.assert_array_equal(ne.mask(meta, [3]),
+                                  [False, True, False, True])
+    # compiled form is literally the complement value-set
+    d = compile_to_dnf(ne, [3])
+    assert d.disjuncts == (((0, (0, 2)),),)
+
+
+def test_range_lowering_and_clipping():
+    d = compile_to_dnf(Range(0, 2, 4), [8])
+    assert d.disjuncts == (((0, (2, 3, 4)),),)
+    assert compile_to_dnf(Range(0, None, 1), [8]).disjuncts == \
+        (((0, (0, 1)),),)
+    assert compile_to_dnf(Range(0, 6, None), [8]).disjuncts == \
+        (((0, (6, 7)),),)
+    # hi beyond the domain clips; an empty interval is never
+    assert compile_to_dnf(Range(0, 6, 99), [8]).disjuncts == \
+        (((0, (6, 7)),),)
+    assert compile_to_dnf(Range(0, 5, 2), [8]).n_disjuncts == 0
+
+
+def test_disjunct_bound_raises():
+    wide = And(*[Or(In(f, [0]), In(f, [1])) for f in range(4)])
+    with pytest.raises(ValueError, match="max_disjuncts"):
+        compile_to_dnf(wide, VOCAB, max_disjuncts=MAX_DISJUNCTS)
+    assert compile_to_dnf(wide, VOCAB, max_disjuncts=16).n_disjuncts == 16
+
+
+def test_simplification():
+    """Same-field intersection, unsatisfiable-disjunct pruning, duplicate
+    merge, and unconstrained absorption."""
+    assert compile_to_dnf(And(In(0, [1, 2]), In(0, [2, 3])),
+                          VOCAB).disjuncts == (((0, (2,)),),)
+    assert compile_to_dnf(And(In(0, [1]), In(0, [2])),
+                          VOCAB).n_disjuncts == 0
+    assert compile_to_dnf(Or(In(0, [1]), In(0, [1])),
+                          VOCAB).n_disjuncts == 1
+    assert compile_to_dnf(Or(In(0, [1]), FilterExpr.always()),
+                          VOCAB).disjuncts == ((),)
+
+
+def test_filter_predicate_is_single_disjunct_alias():
+    pred = FilterPredicate.make({0: [1, 2], 2: [3]})
+    meta = np.asarray([[1, 0, 3, 0], [2, 0, 0, 0], [-1, 0, 3, 0]], np.int32)
+    np.testing.assert_array_equal(pred.mask(meta), pred.expr().mask(meta))
+    d = as_dnf(pred)
+    assert d.disjuncts == (pred.clauses,)
+    assert d.to_predicate() == pred
+    np.testing.assert_array_equal(d.mask(meta), pred.mask(meta))
+    # the legacy match-nothing dummy and never() agree everywhere
+    dummy = FilterPredicate.make({0: []})
+    np.testing.assert_array_equal(dummy.mask(meta),
+                                  FilterExpr.never().mask(meta))
+    assert as_dnf(FilterExpr.never()).to_predicate().clauses == ((0, ()),)
+
+
+def test_negative_values_never_match_any_oracle():
+    """A clause value of -1 can never match (code -1 = unpopulated): the
+    predicate oracle, the wrapped-DNF oracle, and a hand-built DNF all
+    agree with the device packers, which drop negative values."""
+    meta = np.asarray([[-1], [0]], np.int32)
+    p = FilterPredicate.make({0: [-1, 0]})
+    np.testing.assert_array_equal(p.mask(meta), [False, True])
+    assert not p.matches_row(meta[0])
+    np.testing.assert_array_equal(as_dnf(p).mask(meta), [False, True])
+    d = DNF((((0, (-1, 0)),),))
+    np.testing.assert_array_equal(d.mask(meta), [False, True])
+
+
+def test_derived_vocab_sizes():
+    meta = np.asarray([[3, -1], [0, -1]], np.int32)
+    assert derived_vocab_sizes(meta) == (4, 0)
+    # any domain covering the observed codes gives identical Not masks
+    e = Not(In(0, [0]))
+    np.testing.assert_array_equal(e.mask(meta, (4, 0)),
+                                  e.mask(meta, (40, 7)))
