@@ -130,6 +130,15 @@ def smoke() -> None:
     assert 0.0 <= od["recall"] <= 1.0
     assert od["n_disjuncts"] == 2
     _csv("search/smoke_or2", 1e6 / od["qps"], f"recall={od['recall']:.3f}")
+    # dynamic-insert path: the append must complete and the grown index
+    # must still answer in one dispatch with sane recall
+    ins = next(v for k, v in res.items() if k.startswith("insert/"))
+    assert ins["rows_per_s"] > 0, ins
+    pi = next(v for k, v in res.items() if k.startswith("post_insert/"))
+    assert pi["dispatches_per_batch"] == 1, pi
+    assert 0.0 <= pi["recall"] <= 1.0
+    _csv("search/smoke_insert", 1e6 / ins["rows_per_s"],
+         f"post_recall={pi['recall']:.3f}")
     print(f"[smoke search bench {time.time()-t0:.0f}s] OK")
 
 
@@ -138,8 +147,8 @@ def main() -> None:
     from benchmarks.kernel_bench import (anchor_select_bench, engine_bench,
                                          kernel_microbench)
     from benchmarks.search_bench import OUT_PATH as SEARCH_OUT
-    from benchmarks.search_bench import (or_search_bench, search_bench,
-                                         write_baseline)
+    from benchmarks.search_bench import (insert_bench, or_search_bench,
+                                         search_bench, write_baseline)
 
     results: dict = {}
     t_all = time.time()
@@ -232,14 +241,22 @@ def main() -> None:
     t0 = time.time()
     results["search"] = search_bench()
     results["search"].update(or_search_bench())  # disjunctive or2 rows
+    results["search"].update(insert_bench())     # dynamic-insert rows
     write_baseline(results["search"])
     print("\n== Fused single-dispatch search (Q x selectivity) ==")
     for name, r in results["search"].items():
         if name == "config":
             continue
+        if name.startswith("insert/"):
+            print(f"{name:14s} rows/s={r['rows_per_s']:8.1f} "
+                  f"batch={r['batch_ms']:7.1f}ms "
+                  f"repairs={r['reverse_edge_repairs']}")
+            _csv(f"search/{name}", 1e6 / r["rows_per_s"],
+                 f"rows_per_s={r['rows_per_s']:.0f}")
+            continue
         print(f"{name:14s} qps={r['qps']:8.1f} p50={r['p50_ms']:7.1f}ms "
               f"p99={r['p99_ms']:7.1f}ms recall={r['recall']:.3f} "
-              f"mask={r['mask_state_bytes']/1024:.0f}KiB")
+              f"mask={r.get('mask_state_bytes', 0)/1024:.0f}KiB")
         _csv(f"search/{name}", 1e6 / r["qps"], f"recall={r['recall']:.3f}")
     print(f"[search bench {time.time()-t0:.0f}s] -> {SEARCH_OUT}")
 

@@ -17,8 +17,14 @@ two-field ``Or`` predicates with engineered union selectivity, compiled to
 DNF clause tables and evaluated by the in-kernel disjunct union
 (DESIGN.md §8) — still one fused dispatch per batch.
 
+``insert_bench`` adds dynamic-insert rows (``insert/b<B>``: rows/sec of
+the append path at batch sizes {64, 256, 1024}; ``post_insert/q64/sel0.1``:
+search QPS + recall on the grown index) — the ingest trajectory next to
+the search trajectory it must not degrade (DESIGN.md §9).
+
 ``--smoke`` (or smoke=True) runs a tiny corpus with 2 queries (fused +
-sharded + disjunctive paths): the CI entrypoint guard, not a measurement.
+sharded + disjunctive + insert paths): the CI entrypoint guard, not a
+measurement.
 """
 from __future__ import annotations
 
@@ -194,6 +200,57 @@ def sharded_search_bench(batch_sizes=(64,), selectivities=SELECTIVITIES, *,
     return out
 
 
+def insert_bench(batch_sizes=(64, 256, 1024), *, n: int = 8000, d: int = 64,
+                 k: int = 10, reps: int = 20, graph_k: int = 16,
+                 seed: int = 7, q_post: int = 64) -> dict:
+    """Dynamic-insert rows (DESIGN.md §9): the ``search_bench`` corpus is
+    built on a base prefix with capacity for the full n, then the held-out
+    rows are appended through ``BatchedEngine.insert_batch`` at each batch
+    size — ``insert/b<B>`` rows report rows/sec of the whole append path
+    (slab writes + reverse-edge graph repair + incremental atlas + device
+    refresh). A final ``post_insert/q64/sel0.1`` row re-measures search QPS
+    and recall on the grown index, so ingest-induced recall or latency
+    drift shows up next to the static rows it must match."""
+    ds = make_selectivity_dataset(SELECTIVITIES, n=n, d=d, n_components=24,
+                                  seed=seed)
+    total_ins = sum(batch_sizes)
+    if total_ins >= n:
+        raise ValueError(f"insert batches ({total_ins}) exceed corpus {n}")
+    base_n = n - total_ins
+    graph = build_alpha_knn(ds.vectors[:base_n], k=graph_k,
+                            r_max=3 * graph_k, alpha=1.2)
+    from repro.core.types import Dataset
+    base = Dataset(ds.vectors[:base_n], ds.metadata[:base_n],
+                   ds.field_names, ds.vocab_sizes)
+    atlas = AnchorAtlas.build(base, seed=0)
+    index = FiberIndex(base.vectors, base.metadata, graph, atlas)
+    eng = BatchedEngine(index, BatchedParams(k=k, beam_width=4),
+                        vocab_sizes=ds.vocab_sizes, capacity=n,
+                        graph_k=graph_k)
+    out: dict = {}
+    written = base_n
+    for b in batch_sizes:
+        before = eng.insert_stats
+        t0 = time.time()
+        eng.insert_batch(ds.vectors[written:written + b],
+                         ds.metadata[written:written + b])
+        dt = time.time() - t0
+        written += b
+        st = eng.insert_stats  # counters are cumulative: report the delta
+        out[f"insert/b{b}"] = {
+            "rows_per_s": b / dt, "batch_ms": dt * 1e3,
+            "corpus_rows": st["corpus_rows"],
+            "reclusters": st["reclusters"] - before["reclusters"],
+            "reverse_edge_repairs": (st["reverse_edge_repairs"]
+                                     - before["reverse_edge_repairs"])}
+    qs = make_selectivity_queries(ds, 1, q_post)
+    attach_ground_truth(ds, qs, k=k)
+    row = measure_batch(eng, qs, reps)
+    row["dynamic_fraction"] = eng.insert_stats["dynamic_fraction"]
+    out[f"post_insert/q{q_post}/sel0.1"] = row
+    return out
+
+
 def write_baseline(results: dict, path: str = OUT_PATH) -> None:
     parent = os.path.dirname(path)
     if parent:
@@ -215,10 +272,15 @@ def main(smoke: bool = False) -> dict:
         results.update(or_search_bench(
             batch_sizes=(2,), or_sels=(0.3,), n=600, d=16, k=5, reps=1,
             graph_k=8))
+        # and the dynamic-insert path: append through the capacity slab,
+        # then search the grown index
+        results.update(insert_bench(batch_sizes=(8,), n=600, d=16, k=5,
+                                    reps=1, graph_k=8, q_post=2))
     else:
         results = search_bench()
         results.update(sharded_search_bench())
         results.update(or_search_bench())
+        results.update(insert_bench())
         write_baseline(results)
     return results
 
@@ -228,6 +290,11 @@ if __name__ == "__main__":
     res = main(smoke="--smoke" in sys.argv)
     for name, r in res.items():
         if name == "config":
+            continue
+        if name.startswith("insert/"):
+            print(f"{name:14s} rows/s={r['rows_per_s']:8.1f} "
+                  f"batch={r['batch_ms']:7.1f}ms "
+                  f"repairs={r['reverse_edge_repairs']}")
             continue
         mask_b = r.get("mask_state_bytes",
                        r.get("mask_state_bytes_per_shard", 0))

@@ -51,14 +51,23 @@ class AnchorAtlas:
               seed: int = 0) -> "AnchorAtlas":
         k = n_clusters or int(np.ceil(np.sqrt(ds.n)))
         centroids, assign = kmeans(ds.vectors, k, iters=iters, seed=seed)
-        F = ds.n_fields
+        return AnchorAtlas.from_assignment(centroids, assign, ds.metadata)
+
+    @staticmethod
+    def from_assignment(centroids: np.ndarray, assign: np.ndarray,
+                        metadata: np.ndarray) -> "AnchorAtlas":
+        """Build the members / inverted-index tables for a GIVEN clustering
+        (the single O(n·F) pass of Lemma 4.1). This is the one shared
+        construction: ``build`` feeds it a fresh kmeans, the dynamic-insert
+        path feeds it the incrementally maintained assignment."""
+        k = centroids.shape[0]
+        F = metadata.shape[1]
         members: list[dict[int, dict[int, np.ndarray]]] = [
             {f: {} for f in range(F)} for _ in range(k)]
         cluster_index: list[dict[int, list[int]]] = [{} for _ in range(F)]
-        # single O(n·F) pass (Lemma 4.1)
         order = np.argsort(assign, kind="stable")
         for f in range(F):
-            col = ds.metadata[:, f]
+            col = metadata[:, f]
             for i in order:
                 v = int(col[i])
                 if v < 0:

@@ -32,8 +32,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.batched.bitmap import (n_words, popcount, set_bits,
-                                       test_bits, unpack_bits)
+from repro.core.batched.bitmap import (n_words, pack_bits, popcount,
+                                       set_bits, test_bits, unpack_bits)
 from repro.core.device_atlas import (DeviceAtlas, pack_dnf, pack_predicates,
                                      table_n_disj)
 from repro.core.predicate import as_dnf
@@ -58,6 +58,10 @@ class BatchedParams:
     jump_budget: int = 3
     n_seeds: int = 10
     c_max: int = 5
+    # minimum anchor-seed quota per live disjunct (DNF queries only): a
+    # starved disjunct gets its best cluster visited + this many seeds, so
+    # a dominant disjunct can't monopolize the restart budget
+    disjunct_quota: int = 2
 
 
 def _merge_queue(q_v, q_i, new_v, new_i, cap: int):
@@ -280,7 +284,8 @@ def atlas_round(datlas: DeviceAtlas, vectors, adjacency, pass_bm, passes,
     gate = processed | ~need[:, None]
     seeds, used = datlas.select_anchors_batch(
         q_vecs, (fields, allowed), gate, vectors, passes,
-        n_seeds=p.n_seeds, c_max=p.c_max, backend=seed_backend)
+        n_seeds=p.n_seeds, c_max=p.c_max, backend=seed_backend,
+        disjunct_quota=p.disjunct_quota)
     out = walk_batch(vectors, adjacency, pass_bm, q_vecs, seeds, p,
                      init_results=(res_v, res_i))
     found = (out["res_v"] < INF / 2).sum(axis=1)
@@ -413,15 +418,66 @@ class BatchedEngine:
     round loop (one jitted ``atlas_round`` per round) as the parity and
     migration baseline. On non-CPU backends the per-round state buffers
     (processed/need/res_v/res_i) are donated into the round call.
+
+    ``capacity`` (DESIGN.md §9) turns the device index into an append-able
+    capacity slab: arrays are sized to ``capacity`` rows, a row-validity
+    bitmap masks the unwritten tail out of every pass set, and
+    ``insert_batch`` grows the corpus in place (graph repair + incremental
+    atlas update on a host mirror, then a same-shape device refresh — the
+    compiled search program is reused, and ``self.index`` keeps the
+    build-time snapshot). ``graph_k``/``alpha`` are the append path's
+    forward-edge count and α-RNG slack.
     """
 
     def __init__(self, index: FiberIndex,
                  params: BatchedParams = BatchedParams(),
                  seed_backend: str = "topk", v_cap: int | None = None,
-                 vocab_sizes=None):
+                 vocab_sizes=None, capacity: int | None = None,
+                 graph_k: int = 16, alpha: float = 1.2):
+        from repro.core.batched.insert import (InsertState,
+                                               emit_device_atlas,
+                                               make_shard_state)
+
         self.index = index
         self.p = params
-        self.datlas = index.atlas.to_device(v_cap=v_cap)
+        n = index.vectors.shape[0]
+        if capacity is None:
+            self.datlas = index.atlas.to_device(v_cap=v_cap)
+            self.vectors = jnp.asarray(index.vectors)
+            self.adjacency = jnp.asarray(index.graph.neighbors)
+            self.metadata = jnp.asarray(index.metadata)
+            self._state = None
+            self._valid_bm = None
+        else:
+            if capacity < n:
+                raise ValueError(f"capacity {capacity} < corpus size {n}")
+            # widen the row width for the append path's 1.5x graph_k
+            # forward edges (mirrors build_sharded_index)
+            adj = np.asarray(index.graph.neighbors, np.int32)
+            w = max(adj.shape[1], graph_k + graph_k // 2)
+            if w > adj.shape[1]:
+                adj = np.concatenate(
+                    [adj, np.full((n, w - adj.shape[1]), -1, np.int32)],
+                    axis=1)
+            slab = make_shard_state(
+                np.asarray(index.vectors, np.float32),
+                np.asarray(index.metadata, np.int32),
+                np.arange(n, dtype=np.int32), adj,
+                index.atlas, cap=capacity)
+            if v_cap is None:
+                # same auto-sizing rule as AnchorAtlas.to_device
+                from repro.core.device_atlas import auto_v_cap
+                vmax = int(index.metadata.max()) if index.metadata.size \
+                    else -1
+                v_cap = auto_v_cap(vmax)
+            self._state = InsertState(shards=[slab], v_cap=v_cap,
+                                      graph_k=graph_k, alpha=alpha,
+                                      seed=0, next_gid=n)
+            self.datlas = emit_device_atlas(slab, v_cap)
+            self.vectors = jnp.asarray(slab.vectors)
+            self.adjacency = jnp.asarray(slab.adjacency)
+            self.metadata = jnp.asarray(slab.metadata)
+            self._valid_bm = pack_bits(jnp.asarray(slab.valid))
         # per-field domains for Not/Range lowering in FilterExpr queries;
         # derived from observed codes when the dataset's declaration isn't
         # handed in (identical masks for any domain covering the corpus)
@@ -438,10 +494,35 @@ class BatchedEngine:
                               seed_backend=seed_backend),
             donate_argnums=() if on_cpu else (4, 5, 6))
         self._passes = jax.jit(_eval_passes)
-        self.vectors = jnp.asarray(index.vectors)
-        self.adjacency = jnp.asarray(index.graph.neighbors)
-        self.metadata = jnp.asarray(index.metadata)
         self.dispatches = 0
+
+    def insert_batch(self, vectors, metadata) -> np.ndarray:
+        """Append (vector, metadata) rows to the live index: slab writes +
+        validity-bit flips, reverse-edge graph repair, and the incremental
+        atlas update run on the host mirror, then the device arrays are
+        refreshed at the same shapes (no recompile, no extra search
+        dispatches). Returns the new rows' ids."""
+        from repro.core.batched.insert import (emit_device_atlas,
+                                               insert_rows)
+
+        if self._state is None:
+            raise ValueError(
+                "engine was built without spare capacity; construct "
+                "BatchedEngine(..., capacity=...) to enable insert_batch")
+        gids, _ = insert_rows(self._state, vectors, metadata)
+        slab = self._state.shards[0]
+        self.vectors = jnp.asarray(slab.vectors)
+        self.adjacency = jnp.asarray(slab.adjacency)
+        self.metadata = jnp.asarray(slab.metadata)
+        self.datlas = emit_device_atlas(slab, self.datlas.v_cap)
+        self._valid_bm = pack_bits(jnp.asarray(slab.valid))
+        self.vocab_sizes = self._state.expand_vocab(self.vocab_sizes)
+        return gids
+
+    @property
+    def insert_stats(self) -> dict | None:
+        """Ingest/staleness accounting, or None on a fixed-size engine."""
+        return self._state.stats() if self._state is not None else None
 
     def _pack_queries(self, queries: list[Query]):
         return pack_query_batch(queries, v_cap=self.datlas.v_cap,
@@ -455,7 +536,8 @@ class BatchedEngine:
         Q = len(queries)
         q_vecs, fields, allowed = self._pack_queries(queries)
         out = self._search(self.datlas, self.vectors, self.adjacency,
-                           self.metadata, q_vecs, fields, allowed)
+                           self.metadata, q_vecs, fields, allowed,
+                           valid_bm=self._valid_bm)
         self.dispatches += 1
         host = jax.device_get(out)  # the batch's single host sync
         res_v, res_i = host["res_v"], host["res_i"]
@@ -473,6 +555,8 @@ class BatchedEngine:
         Q = len(queries)
         q_vecs, fields, allowed = self._pack_queries(queries)
         pass_bm = self._passes(self.metadata, fields, allowed)
+        if self._valid_bm is not None:  # capacity slab: mask unwritten rows
+            pass_bm = pass_bm & self._valid_bm[None, :]
         self.dispatches += 1
         passes = unpack_bits(pass_bm, self.vectors.shape[0])
         processed = jnp.zeros((Q, self.datlas.n_clusters), bool)

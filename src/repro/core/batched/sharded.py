@@ -34,14 +34,16 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.atlas import AnchorAtlas
-from repro.core.batched.bitmap import n_words, pack_bits
+from repro.core.batched.bitmap import pack_bits
 from repro.core.batched.engine import (INF, BatchedParams, pack_query_batch,
                                        search_batch)
-from repro.core.device_atlas import DeviceAtlas, stack_atlases
-from repro.core.graph import build_shard_graphs, stack_adjacency
+from repro.core.batched.insert import (InsertState, emit_device_atlas,
+                                       insert_rows, make_shard_state)
+from repro.core.device_atlas import (DeviceAtlas, auto_v_cap,
+                                     stack_atlases)
+from repro.core.graph import build_shard_graphs
 from repro.core.predicate import derived_vocab_sizes
 from repro.core.types import Dataset, Query
-from repro.kernels.ops import V_CAP
 from repro.launch.mesh import index_axis_size
 from repro.launch.shardings import index_shardings
 from repro.models.common import shard_map
@@ -67,6 +69,10 @@ class ShardedIndex:
     # per-field domains for FilterExpr Not/Range lowering (derived from the
     # unpadded metadata at build time)
     vocab_sizes: tuple[int, ...] | None = None
+    # host mirror for the append path (DESIGN.md §9): attached only when
+    # the build reserved ``capacity`` slack; None = build-once index,
+    # insert_batch raises
+    insert_state: InsertState | None = None
 
     @property
     def n_shards(self) -> int:
@@ -82,52 +88,65 @@ def build_sharded_index(vectors: np.ndarray, metadata: np.ndarray,
                         r_max: int = 96, alpha: float = 1.2,
                         n_clusters: int | None = None,
                         v_cap: int | None = None,
-                        seed: int = 0) -> ShardedIndex:
+                        seed: int = 0,
+                        capacity: int | None = None) -> ShardedIndex:
     """Partition a corpus into ``n_shards`` row blocks and build each
     shard's subgraph + atlas. All shards share one n_clusters and one v_cap
     (the atlas leaves must stack to fixed shapes for ``shard_map``), and
-    every shard is padded to m = ceil(n / S) rows; pad rows are killed by
-    the row-validity bitmap, never by luck of the predicate."""
+    every shard is padded to m rows; pad rows are killed by the
+    row-validity bitmap, never by luck of the predicate.
+
+    ``capacity`` reserves append room (DESIGN.md §9): m becomes
+    ceil(capacity / S) and the spare rows are capacity-slab slots that
+    ``ShardedEngine.insert_batch`` fills later — identical shapes, so
+    growing the corpus never recompiles the search program. Without it,
+    m = ceil(n / S) and inserts fail on capacity."""
     vectors = np.asarray(vectors, np.float32)
     metadata = np.asarray(metadata, np.int32)
     n, d = vectors.shape
     f_count = metadata.shape[1]
+    if capacity is not None and capacity < n:
+        raise ValueError(f"capacity {capacity} < corpus size {n}")
     graphs, bounds = build_shard_graphs(vectors, n_shards, k=graph_k,
                                         r_max=r_max, alpha=alpha)
-    m = -(-n // n_shards)
+    m = -(-max(n, capacity or 0) // n_shards)
     min_real = min(hi - lo for lo, hi in bounds)
     if n_clusters is None:
         n_clusters = int(np.ceil(np.sqrt(m)))
     n_clusters = min(n_clusters, min_real)
     if v_cap is None:
         vmax = int(metadata.max()) if metadata.size else -1
-        v_cap = max(V_CAP, 32 * n_words(vmax + 1))
+        v_cap = auto_v_cap(vmax)
 
-    vec = np.zeros((n_shards, m, d), np.float32)
-    meta = np.full((n_shards, m, f_count), -1, np.int32)
-    gids = np.full((n_shards, m), -1, np.int32)
-    valid = np.zeros((n_shards, m), bool)
+    # one adjacency width across shards, with room for the forward edges
+    # appended rows request later (1.5x graph_k, see insert.insert_rows)
+    r = max(max(g.r_pad for g in graphs), graph_k + graph_k // 2)
     field_names = [f"f{i}" for i in range(f_count)]
-    atlases = []
+    slabs = []
     for s, (lo, hi) in enumerate(bounds):
-        n_s = hi - lo
-        vec[s, :n_s] = vectors[lo:hi]
-        meta[s, :n_s] = metadata[lo:hi]
-        gids[s, :n_s] = np.arange(lo, hi, dtype=np.int32)
-        valid[s, :n_s] = True
         ds_s = Dataset(vectors[lo:hi], metadata[lo:hi], field_names,
                        [v_cap] * f_count)
         atlas = AnchorAtlas.build(ds_s, n_clusters=n_clusters, seed=seed)
-        atlases.append(
-            DeviceAtlas.from_atlas(atlas, v_cap=v_cap).pad_rows(m))
+        adj_s = np.full((hi - lo, r), -1, np.int32)
+        adj_s[:, : graphs[s].r_pad] = graphs[s].neighbors
+        slabs.append(make_shard_state(
+            vectors[lo:hi], metadata[lo:hi],
+            np.arange(lo, hi, dtype=np.int32), adj_s, atlas, cap=m))
+    # the insert state only exists when append room was reserved: a
+    # build-once index must REFUSE inserts rather than silently absorb a
+    # few rows into its ceil(n/S) padding slack
+    istate = (InsertState(shards=slabs, v_cap=v_cap, graph_k=graph_k,
+                          alpha=alpha, seed=seed, next_gid=n)
+              if capacity is not None else None)
     return ShardedIndex(
-        vectors=jnp.asarray(vec),
-        adjacency=jnp.asarray(stack_adjacency(graphs, m)),
-        metadata=jnp.asarray(meta),
-        global_ids=jnp.asarray(gids),
-        valid_bm=pack_bits(jnp.asarray(valid)),
-        datlas=stack_atlases(atlases), n=n,
-        vocab_sizes=derived_vocab_sizes(metadata))
+        vectors=jnp.asarray(np.stack([sl.vectors for sl in slabs])),
+        adjacency=jnp.asarray(np.stack([sl.adjacency for sl in slabs])),
+        metadata=jnp.asarray(np.stack([sl.metadata for sl in slabs])),
+        global_ids=jnp.asarray(np.stack([sl.global_ids for sl in slabs])),
+        valid_bm=pack_bits(jnp.asarray(np.stack([sl.valid for sl in slabs]))),
+        datlas=stack_atlases([emit_device_atlas(sl, v_cap) for sl in slabs]),
+        n=n, vocab_sizes=derived_vocab_sizes(metadata),
+        insert_state=istate)
 
 
 def merge_topk(all_v: jax.Array, all_i: jax.Array, k: int):
@@ -165,8 +184,10 @@ class ShardedEngine:
                 f"{index_axis_size(mesh, axis)} devices")
         self.mesh, self.axis, self.p = mesh, axis, params
         self._seed_backend = seed_backend
+        self._istate = sindex.insert_state
         sh = index_shardings(mesh, axis)
         put = functools.partial(jax.device_put, device=sh["rows"])
+        self._put = put
         self.vectors = put(sindex.vectors)
         self.adjacency = put(sindex.adjacency)
         self.metadata = put(sindex.metadata)
@@ -209,6 +230,64 @@ class ShardedEngine:
         in_specs = tuple([P(axis)] * (nl + 5) + [P(), P(), P()])
         return jax.jit(shard_map(fn, mesh=self.mesh, in_specs=in_specs,
                                  out_specs=P(), check_vma=False))
+
+    def insert_batch(self, vectors: np.ndarray,
+                     metadata: np.ndarray) -> np.ndarray:
+        """Append (vector, metadata) rows to the live index (DESIGN.md §9):
+        balance-aware shard placement, slab writes + validity-bit flips,
+        reverse-edge graph repair, and incremental atlas updates all happen
+        on the host mirror; the sharded device arrays are then re-placed
+        with the same shapes and shardings, so the compiled ``shard_map``
+        search program is reused as-is. Returns the new rows' global ids.
+
+        Ingest costs host->device transfers only — ``dispatches`` (the
+        search-path contract counter) is untouched."""
+        if self._istate is None:
+            raise ValueError(
+                "index has no insert state; build_sharded_index(...) it "
+                "with capacity=... to reserve append room")
+        gids, touched = insert_rows(self._istate, vectors, metadata)
+        self._refresh_device_index(touched)
+        return gids
+
+    def _refresh_device_index(self, touched: list[int]) -> None:
+        st, put = self._istate, self._put
+        if not hasattr(self, "_host"):
+            # first insert: snapshot the host stacks + per-shard emitted
+            # atlases once, so later batches re-emit only touched shards
+            # (touched ones are emitted by the loop below, not twice here)
+            self._host = {
+                "vectors": np.stack([sl.vectors for sl in st.shards]),
+                "adjacency": np.stack([sl.adjacency for sl in st.shards]),
+                "metadata": np.stack([sl.metadata for sl in st.shards]),
+                "global_ids": np.stack([sl.global_ids
+                                        for sl in st.shards]),
+                "valid": np.stack([sl.valid for sl in st.shards])}
+            self._shard_atlases = [
+                None if s in touched else emit_device_atlas(sl, self.v_cap)
+                for s, sl in enumerate(st.shards)]
+        for s in touched:
+            sl = st.shards[s]
+            self._host["vectors"][s] = sl.vectors
+            self._host["adjacency"][s] = sl.adjacency
+            self._host["metadata"][s] = sl.metadata
+            self._host["global_ids"][s] = sl.global_ids
+            self._host["valid"][s] = sl.valid
+            self._shard_atlases[s] = emit_device_atlas(sl, self.v_cap)
+        self.vectors = put(jnp.asarray(self._host["vectors"]))
+        self.adjacency = put(jnp.asarray(self._host["adjacency"]))
+        self.metadata = put(jnp.asarray(self._host["metadata"]))
+        self.global_ids = put(jnp.asarray(self._host["global_ids"]))
+        self.valid_bm = put(pack_bits(jnp.asarray(self._host["valid"])))
+        datlas = jax.tree.map(put, stack_atlases(self._shard_atlases))
+        self._leaves, self._tdef = jax.tree_util.tree_flatten(datlas)
+        self.n = st.next_gid
+        self.vocab_sizes = st.expand_vocab(self.vocab_sizes)
+
+    @property
+    def insert_stats(self) -> dict | None:
+        """Ingest/staleness accounting, or None on a build-once index."""
+        return self._istate.stats() if self._istate is not None else None
 
     def _fetch(self, out, q_n: int):
         host = jax.device_get(out)  # the batch's single host sync

@@ -42,6 +42,14 @@ NEG = jnp.float32(-3.4e38)
 MEMBER_CAP = 4096  # mirrors AnchorAtlas.cluster_members_matching's cap
 
 
+def auto_v_cap(vmax: int) -> int:
+    """Value-bitmap width for a corpus whose largest metadata code is
+    ``vmax``: at least V_CAP (common small vocabularies share one width),
+    else the next 32-bit word boundary — the ONE sizing rule shared by
+    atlas packing and both engines' capacity-slab builds."""
+    return max(V_CAP, 32 * _n_words(vmax + 1))
+
+
 def _pack_clauses(clauses, fields_row: np.ndarray, allowed_row: np.ndarray,
                   v_cap: int) -> None:
     """Write one conjunctive clause list into a (C,) fields row + a
@@ -162,7 +170,7 @@ class DeviceAtlas:
         if v_cap is None:
             vmax = max((v for by_f in atlas.cluster_index for v in by_f),
                        default=-1)
-            v_cap = max(V_CAP, 32 * _n_words(vmax + 1))
+            v_cap = auto_v_cap(vmax)
         order = np.argsort(assign, kind="stable").astype(np.int32)
         offsets = np.zeros(k + 1, np.int64)
         offsets[1:] = np.cumsum(np.bincount(assign, minlength=k))
@@ -215,14 +223,21 @@ class DeviceAtlas:
         tables (``pack_dnf``) OR the per-disjunct conjunctive masks, with
         dead disjuncts contributing False."""
         if fields.ndim == 3:
-            pres = self.presence[jnp.maximum(fields, 0)]    # (Q, D, C, K, W)
-            hit = ((pres & allowed[..., None, :]) != 0).any(-1)  # (Q, D, C, K)
-            conj = jnp.where((fields >= 0)[..., None], hit, True).all(axis=2)
-            alive = fields[:, :, 0] > DEAD_DISJUNCT         # (Q, D)
-            return (conj & alive[:, :, None]).any(axis=1)
+            return self._disjunct_cluster_masks(fields, allowed).any(axis=1)
         pres = self.presence[jnp.maximum(fields, 0)]        # (Q, C, K, W)
         hit = ((pres & allowed[:, :, None, :]) != 0).any(-1)  # (Q, C, K)
         return jnp.where((fields >= 0)[:, :, None], hit, True).all(axis=1)
+
+    def _disjunct_cluster_masks(self, fields: jax.Array,
+                                allowed: jax.Array) -> jax.Array:
+        """(Q, D, C) DNF tables -> (Q, D, K) bool per-disjunct conjunctive
+        cluster-match masks (dead disjuncts all-False) — the pre-union form
+        the per-disjunct seed quota needs."""
+        pres = self.presence[jnp.maximum(fields, 0)]        # (Q, D, C, K, W)
+        hit = ((pres & allowed[..., None, :]) != 0).any(-1)  # (Q, D, C, K)
+        conj = jnp.where((fields >= 0)[..., None], hit, True).all(axis=2)
+        alive = fields[:, :, 0] > DEAD_DISJUNCT             # (Q, D)
+        return conj & alive[:, :, None]
 
     def _matched_counts(self, passes: jax.Array) -> tuple[jax.Array, jax.Array]:
         """passes (Q, n) bool -> (counts (Q, K) of matching points per
@@ -241,7 +256,7 @@ class DeviceAtlas:
         self, q_vecs: jax.Array, clause_tables: tuple[jax.Array, jax.Array],
         processed: jax.Array, vectors: jax.Array, passes: jax.Array, *,
         n_seeds: int = 10, c_max: int = 5, member_cap: int = MEMBER_CAP,
-        backend: str = "sort",
+        backend: str = "sort", disjunct_quota: int = 2,
     ) -> tuple[jax.Array, jax.Array]:
         """One anchor-selection round for Q queries (Alg. 2 lines 3–14,
         batched). Exact host semantics: rank matching unprocessed clusters
@@ -254,6 +269,17 @@ class DeviceAtlas:
         engine unpacks its packed pass bitmap once per batch and hands the
         dense form to every round). Returns (seeds (Q, n_seeds) i32
         -1-padded, used (Q, K) bool to OR into ``processed``).
+
+        Disjunctive (Q, D, C) tables add a minimum per-disjunct quota
+        (``disjunct_quota`` seeds): the union scan ranks clusters purely by
+        centroid score, so a dominant disjunct whose nearest cluster holds
+        ≥ n_seeds matches can exhaust the whole budget before any cluster
+        of a rare disjunct is visited. Each *starved* live disjunct — one
+        with an available matching cluster but none visited this round —
+        gets its best-scoring cluster force-visited and up to
+        ``disjunct_quota`` nearest passing members spliced into the seed
+        set (displacing tail main seeds; the conjunctive rank-2 path is
+        byte-identical to before).
         """
         fields, allowed = clause_tables
         if allowed.shape[-1] != self.presence.shape[-1]:
@@ -266,7 +292,13 @@ class DeviceAtlas:
         n_seeds = min(n_seeds, n)
         qidx = jnp.arange(q_n)[:, None]
 
-        avail = self.matching_clusters_batch(fields, allowed) & ~processed
+        # one presence expansion per round: the pre-union (Q, D, K) masks
+        # feed both the availability union and the disjunct-quota repair
+        dmasks = (self._disjunct_cluster_masks(fields, allowed)
+                  if fields.ndim == 3 else None)
+        match = (dmasks.any(axis=1) if dmasks is not None
+                 else self.matching_clusters_batch(fields, allowed))
+        avail = match & ~processed
         scores = q_vecs @ self.centroids.T                    # (Q, K)
         order = jnp.argsort(-jnp.where(avail, scores, NEG), axis=1)
 
@@ -284,44 +316,119 @@ class DeviceAtlas:
         used = jnp.zeros((q_n, k), bool).at[qidx, order].set(visited_r)
 
         elig = passes & used[:, self.assign] & (rank_id < member_cap)
+        # one dense (Q, n) score sweep shared by the seed backends and the
+        # disjunct-quota repair; the TPU topk backend replaces it with
+        # per-slot Pallas calls and skips the dense form entirely
+        on_tpu = jax.default_backend() == "tpu"
+        sims = (None if backend == "topk" and on_tpu
+                else jnp.einsum("qd,nd->qn", q_vecs, vectors))
         if backend == "sort":
-            seeds = self._seed_by_sort(q_vecs, vectors, elig, order, n_seeds)
+            seeds = self._seed_by_sort(sims, elig, order, n_seeds)
         elif backend == "topk":
-            seeds = self._seed_by_topk(q_vecs, vectors, elig, order, cnt_r,
-                                       visited_r, yld_r, n_seeds, c_max)
+            seeds = self._seed_by_topk(q_vecs, vectors, sims, elig, order,
+                                       cnt_r, visited_r, yld_r, n_seeds,
+                                       c_max)
         else:
             raise ValueError(f"unknown seed backend {backend!r}")
+        if dmasks is not None and disjunct_quota > 0:
+            seeds, used = self._apply_disjunct_quota(
+                q_vecs, dmasks, processed, vectors, sims, passes,
+                rank_id, scores, used, seeds,
+                n_seeds=n_seeds, member_cap=member_cap,
+                quota=min(disjunct_quota, n_seeds))
         return seeds, used
 
-    def _seed_by_sort(self, q_vecs, vectors, elig, order, n_seeds: int):
+    def _apply_disjunct_quota(self, q_vecs, dmasks, processed,
+                              vectors, sims, passes, rank_id, scores, used,
+                              seeds,
+                              *, n_seeds: int, member_cap: int, quota: int):
+        """Starved-disjunct repair: force-visit each starved live
+        disjunct's best available cluster and splice up to ``quota`` of its
+        nearest passing members into the seed set (deduped against the
+        main seeds, quota entries winning the truncation to n_seeds).
+
+        "Passing" means the WHOLE predicate (the union pass bitmap): the
+        kernels never emit per-disjunct row bitmaps, so in a mixed cluster
+        the quota seeds may be another disjunct's members that happen to
+        be nearer — the walk still enters the starved disjunct's cluster,
+        but row-level per-disjunct seeding is a possible refinement
+        (ROADMAP)."""
+        q_n, k = used.shape
+        n = vectors.shape[0]
+        d_tab = dmasks.shape[1]
+        dmask = dmasks & ~processed[:, None, :]             # (Q, D, K)
+        best_c = jnp.argmax(jnp.where(dmask, scores[:, None, :], NEG),
+                            axis=2)                         # (Q, D)
+        starved = dmask.any(axis=2) & ~(dmask & used[:, None, :]).any(axis=2)
+        used = used | (starved[:, :, None]
+                       & (jnp.arange(k)[None, None, :] == best_c[..., None])
+                       ).any(axis=1)
+
+        def with_quota():
+            s = (sims if sims is not None
+                 else jnp.einsum("qd,nd->qn", q_vecs, vectors))
+            big = jnp.int32(d_tab * quota + n_seeds)
+            pos = jnp.arange(quota, dtype=jnp.int32)[None, :]
+            q_ids, q_keys = [], []
+            for dj in range(d_tab):
+                m = (passes & starved[:, dj, None]
+                     & (self.assign[None, :] == best_c[:, dj, None])
+                     & (rank_id < member_cap))
+                s_j, ids_j = jax.lax.top_k(jnp.where(m, s, -jnp.inf),
+                                           quota)
+                ok = jnp.isfinite(s_j)
+                q_ids.append(jnp.where(ok, ids_j.astype(jnp.int32), -1))
+                q_keys.append(jnp.where(ok, dj * quota + pos, big))
+            # merge: quota entries carry keys < main entries; dedup by id
+            # via a lexicographic (id, key) sort, then re-sort by key and
+            # truncate to the seed budget
+            main_pos = jnp.arange(n_seeds, dtype=jnp.int32)[None, :]
+            all_ids = jnp.concatenate(q_ids + [seeds], axis=1)
+            all_keys = jnp.concatenate(
+                q_keys + [jnp.where(seeds >= 0, d_tab * quota + main_pos,
+                                    big)], axis=1)
+            sort_ids = jnp.where(all_keys < big, all_ids, n)  # invalid last
+            ids_s, keys_s = jax.lax.sort((sort_ids, all_keys), num_keys=2)
+            dup = jnp.concatenate(
+                [jnp.zeros((q_n, 1), bool), ids_s[:, 1:] == ids_s[:, :-1]],
+                axis=1) & (ids_s < n)
+            keys_f = jnp.where(dup | (ids_s >= n), big, keys_s)
+            keys_o, ids_o = jax.lax.sort((keys_f, ids_s), num_keys=1)
+            return jnp.where(keys_o[:, :n_seeds] < big, ids_o[:, :n_seeds],
+                             -1)
+
+        # the per-disjunct top-k sweeps only run when some disjunct in the
+        # batch is actually starved (batch-level gate: one starved query
+        # pays for the batch, none starved pays only the mask algebra)
+        seeds = jax.lax.cond(starved.any(), with_quota, lambda: seeds)
+        return seeds, used
+
+    def _seed_by_sort(self, sims, elig, order, n_seeds: int):
         """Quota fill via one lexicographic sort: ordering every eligible
         point by (its cluster's rank, cosine distance) and taking the first
         n_seeds reproduces the host's cluster-by-cluster nearest-first fill,
         including the final cluster's truncated quota."""
         q_n, k = order.shape
-        n = vectors.shape[0]
+        n = sims.shape[1]
         qidx = jnp.arange(q_n)[:, None]
         ranks = jnp.broadcast_to(jnp.arange(k, dtype=jnp.int32), (q_n, k))
         cluster_rank = jnp.zeros((q_n, k), jnp.int32).at[qidx, order].set(ranks)
-        sims = jnp.einsum("qd,nd->qn", q_vecs, vectors)
         key1 = jnp.where(elig, cluster_rank[:, self.assign], k)
         key2 = jnp.where(elig, -sims, jnp.float32(jnp.inf))
         pid = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (q_n, n))
         k1s, _, ids = jax.lax.sort((key1, key2, pid), num_keys=2)
         return jnp.where(k1s[:, :n_seeds] < k, ids[:, :n_seeds], -1)
 
-    def _seed_by_topk(self, q_vecs, vectors, elig, order, cnt_r, visited_r,
-                      yld_r, n_seeds: int, c_max: int):
+    def _seed_by_topk(self, q_vecs, vectors, sims, elig, order, cnt_r,
+                      visited_r, yld_r, n_seeds: int, c_max: int):
         """Quota fill via masked cosine top-k: one top-k per
         yielding-cluster slot (≤ c_max) over the corpus with the filter
         bitmap restricted to that slot's cluster. On TPU each slot is a
-        ``masked_cosine_topk`` Pallas call; elsewhere the slots share one
-        XLA score matmul (the ref-oracle math with the Q·n·d sweep
-        amortized across slots)."""
+        ``masked_cosine_topk`` Pallas call (``sims`` is None); elsewhere
+        the slots share the caller's dense score matmul (the ref-oracle
+        math with the Q·n·d sweep amortized across slots)."""
         q_n = q_vecs.shape[0]
-        on_tpu = jax.default_backend() == "tpu"
-        if not on_tpu:
-            sims = jnp.einsum("qd,nd->qn", q_vecs, vectors)
+        on_tpu = sims is None
         # slot j (yield order) -> cluster id and its matched count
         slot_pos = jnp.where(visited_r & (yld_r > 0), _excl_cumsum(yld_r),
                              c_max)

@@ -159,15 +159,80 @@ def build_shard_graphs(vectors: np.ndarray, n_shards: int, *, k: int = 32,
     return graphs, bounds
 
 
-def stack_adjacency(graphs: list[Graph], m: int) -> np.ndarray:
-    """Per-shard padded adjacencies -> one (S, m, R) int32 block, R = max
-    r_pad over shards, -1 padded (rows beyond a shard's real count are all
-    -1: pad rows have no edges and are never gathered)."""
-    r = max(g.r_pad for g in graphs)
-    out = np.full((len(graphs), m, r), -1, np.int32)
-    for s, g in enumerate(graphs):
-        out[s, : g.n, : g.r_pad] = g.neighbors
+def assign_shards_balanced(fill: np.ndarray, cap: int,
+                           n_new: int) -> np.ndarray:
+    """Balance-aware shard assignment for ``n_new`` appended rows: each row
+    goes to the least-filled shard with free capacity (ties break on the
+    lowest shard id, so placement is deterministic). This extends the
+    ``shard_bounds`` balance invariant — valid-row counts differ by at most
+    1 across shards whenever capacity allows — to a corpus that grows after
+    the build. Returns (n_new,) int32 shard ids; raises when the mesh is
+    out of capacity."""
+    fill = np.asarray(fill, np.int64).copy()
+    free = int((cap - fill).sum())
+    if free < n_new:
+        raise ValueError(
+            f"insert of {n_new} rows exceeds free capacity {free} "
+            f"(per-shard cap {cap}); rebuild with a larger capacity")
+    out = np.empty(n_new, np.int32)
+    for i in range(n_new):
+        open_s = np.nonzero(fill < cap)[0]
+        s = open_s[np.argmin(fill[open_s])]
+        out[i] = s
+        fill[s] += 1
     return out
+
+
+def patch_adjacency(adjacency: np.ndarray, vectors: np.ndarray,
+                    n_before: int, n_after: int, *, k: int = 32,
+                    alpha: float = 1.2) -> dict:
+    """Reverse-edge repair (DESIGN.md §9): splice appended rows
+    [n_before, n_after) into an existing padded adjacency, in place.
+
+    Each new row x gets forward edges to its k nearest prior rows (prior =
+    built rows plus earlier rows of this batch, so intra-batch edges form);
+    every forward edge (x -> y) then requests the reverse edge (y -> x):
+    appended into a free slot when y has one, otherwise y's neighbourhood
+    is re-selected by the SAME α-RNG rule the build uses to cap over-degree
+    hubs — over {current neighbours of y} ∪ {x}, width-capped at the padded
+    row width R — so repeated inserts keep the directional-diversity
+    invariant instead of silently dropping reverse edges or growing R.
+
+    ``adjacency`` is (m, R) int32 with -1 padding and rows [n_before, m)
+    all -1; ``vectors`` is the (m, d) capacity slab with rows < n_after
+    written. Returns {"edges_added", "repairs"} for accounting."""
+    r_width = adjacency.shape[1]
+    new_ids = np.arange(n_before, n_after)
+    if new_ids.size == 0:
+        return {"edges_added": 0, "repairs": 0}
+    sims_all = vectors[new_ids] @ vectors[:n_after].T
+    edges_added = repairs = 0
+    for i, x in enumerate(new_ids):
+        sims = sims_all[i, :x]                    # prior rows only, no self
+        kk = min(k, r_width, sims.size)
+        if kk == 0:
+            continue
+        part = np.argpartition(-sims, kk - 1)[:kk]
+        nbrs = part[np.argsort(-sims[part])].astype(np.int32)
+        adjacency[x, : nbrs.size] = nbrs
+        adjacency[x, nbrs.size:] = -1
+        edges_added += nbrs.size
+        for y in nbrs:
+            row = adjacency[y]
+            deg = int((row >= 0).sum())
+            if x in row[:deg]:
+                continue
+            if deg < r_width:
+                row[deg] = x
+                edges_added += 1
+                continue
+            cand = np.concatenate([row[:deg], [x]]).astype(np.int32)
+            kept = _alpha_rng_prune(int(y), cand, vectors, r_width, alpha)
+            row[: kept.size] = kept
+            row[kept.size:] = -1
+            repairs += 1
+            edges_added += int(np.isin(x, kept))
+    return {"edges_added": edges_added, "repairs": repairs}
 
 
 def graph_stats(g: Graph) -> dict:

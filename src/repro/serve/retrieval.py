@@ -43,6 +43,9 @@ class RetrievalService:
     # to the sharded engine (corpus row-partitioned, DESIGN.md §7)
     mesh: object | None = None
     graph_build: dict = dataclasses.field(default_factory=dict)
+    # row capacity the batched/sharded engines reserve for ``ingest``
+    # (DESIGN.md §9); None = build-once service, ingest raises
+    capacity: int | None = None
     _ds: Dataset | None = dataclasses.field(default=None, repr=False)
     _engine: BatchedEngine | None = dataclasses.field(default=None,
                                                       repr=False)
@@ -55,9 +58,9 @@ class RetrievalService:
               alpha: float = GRAPH_BUILD_DEFAULTS["alpha"],
               n_clusters: int | None = None,
               params: SearchParams = SearchParams(),
-              mesh=None) -> "RetrievalService":
+              mesh=None, capacity: int | None = None) -> "RetrievalService":
         svc = RetrievalService(
-            None, params, mesh=mesh, _ds=ds,
+            None, params, mesh=mesh, capacity=capacity, _ds=ds,
             graph_build={"graph_k": graph_k, "r_max": r_max, "alpha": alpha,
                          "n_clusters": n_clusters})
         # a mesh-sharded service uses per-shard graphs/atlases only: defer
@@ -106,7 +109,10 @@ class RetrievalService:
         if self._engine is None:
             self._engine = BatchedEngine(self._global_index(),
                                          self._batched_params(),
-                                         vocab_sizes=self._vocab_sizes())
+                                         vocab_sizes=self._vocab_sizes(),
+                                         capacity=self.capacity,
+                                         graph_k=self._gb()["graph_k"],
+                                         alpha=self._gb()["alpha"])
         return self._engine
 
     def _vocab_sizes(self):
@@ -136,7 +142,7 @@ class RetrievalService:
             sidx = build_sharded_index(
                 vectors, metadata, self._mesh_shards(),
                 graph_k=gb["graph_k"], r_max=gb["r_max"], alpha=gb["alpha"],
-                n_clusters=gb["n_clusters"])
+                n_clusters=gb["n_clusters"], capacity=self.capacity)
             self._sharded = ShardedEngine(sidx, self.mesh,
                                           self._batched_params())
         return self._sharded
@@ -178,6 +184,43 @@ class RetrievalService:
                else self.engine())
         ids, stats = eng.search(queries)
         return ids[:q_real], {k: v[:q_real] for k, v in stats.items()}
+
+    def ingest(self, vectors: np.ndarray,
+               metadata: np.ndarray) -> np.ndarray:
+        """Append documents to the live serving index (DESIGN.md §9):
+        routed to the same engine ``query_batch`` uses (sharded when the
+        mesh partitions the corpus), so newly ingested rows are visible to
+        the very next batch without a rebuild. Requires the service to
+        have been built with spare ``capacity``. Returns the new rows'
+        global ids."""
+        if self.capacity is None:
+            raise ValueError(
+                "service was built without ingest capacity; pass "
+                "capacity=... to RetrievalService.build to reserve append "
+                "room")
+        eng = (self.sharded_engine() if self._mesh_shards() > 1
+               else self.engine())
+        return eng.insert_batch(vectors, metadata)
+
+    def staleness(self) -> dict:
+        """Ingest/staleness accounting: how much of the serving corpus is
+        dynamic, how much append room is left, how often shards
+        re-clustered — plus how many ingested rows the lazily-built
+        sequential index (``query``) has NOT seen, since only the batched
+        engines absorb inserts."""
+        eng = self._sharded if self._sharded is not None else self._engine
+        stats = eng.insert_stats if eng is not None else None
+        if stats is None:
+            n = self._corpus()[0].shape[0]
+            stats = {"inserted_rows": 0, "corpus_rows": n,
+                     "dynamic_fraction": 0.0,
+                     "free_capacity": (self.capacity - n
+                                       if self.capacity else 0),
+                     "insert_batches": 0, "reclusters": 0,
+                     "reverse_edge_repairs": 0}
+        stats["sequential_index_stale_rows"] = (
+            stats["inserted_rows"] if self.index is not None else 0)
+        return stats
 
 
 class EncodedRetriever:

@@ -336,3 +336,95 @@ def test_query_batch_accepts_expressions_and_matches_oracle():
         row = np.asarray(row)
         assert row.size > 0
         assert pred.mask(ds.metadata, ds.vocab_sizes)[row].all()
+
+
+# -- per-disjunct anchor quota (ROADMAP PR 4 follow-up) ----------------------
+
+def _starved_or_setup():
+    """Engineered dominant/rare OR pair (selectivities 0.5 / 0.001): 1500
+    points around e0 all match the dominant disjunct (field 0 == 1) and
+    form cluster 0, whose matched count alone exhausts the seed budget for
+    any query near e0; the rare disjunct's 3 points (field 1 == 1) sit 2
+    degrees off e0 in their own hand-assigned cluster 1, so they belong in
+    the true top-10 of an e0 query but their cluster ranks strictly below
+    cluster 0. The atlas is built from the explicit assignment (kmeans
+    could fold the 3-point cluster into its big neighbour and mask the
+    starvation)."""
+    from repro.core.types import normalize
+
+    rng = np.random.default_rng(17)
+    d = 8
+    e = np.eye(d, dtype=np.float32)
+    n_dom, n_rare, n_far = 1500, 3, 1497
+    dom = normalize(e[0] + 0.25 * rng.standard_normal((n_dom, d)))
+    off = normalize(e[0] + np.tan(np.deg2rad(2.0)) * e[1])
+    rare = normalize(off + 0.003 * rng.standard_normal((n_rare, d)))
+    far = normalize(e[2] + 0.25 * rng.standard_normal((n_far, d)))
+    vecs = np.concatenate([dom, rare, far]).astype(np.float32)
+    n = vecs.shape[0]
+    meta = np.zeros((n, 2), np.int32)
+    meta[:n_dom, 0] = 1
+    meta[n_dom:n_dom + n_rare, 1] = 1
+    assign = np.concatenate([np.zeros(n_dom), np.ones(n_rare),
+                             np.full(n_far, 2)]).astype(np.int32)
+    centroids = np.stack([normalize(vecs[assign == c].mean(axis=0))
+                          for c in range(3)])
+    atlas = AnchorAtlas.from_assignment(centroids, assign, meta)
+    rare_ids = np.arange(n_dom, n_dom + n_rare)
+    return vecs, meta, atlas, rare_ids
+
+
+def test_disjunct_quota_rescues_starved_disjunct():
+    """Selection-level regression: without a quota, the dominant
+    disjunct's nearest cluster swallows the whole seed budget and the rare
+    disjunct's cluster is never visited; with the default quota the rare
+    cluster is force-visited and its nearest passing members are seeded."""
+    from repro.core.device_atlas import DeviceAtlas, pack_dnf
+    from repro.core.predicate import as_dnf
+    from repro.core.types import normalize
+
+    vecs, meta, atlas, rare_ids = _starved_or_setup()
+    pred = Or(In(0, [1]), In(1, [1]))
+    assert abs(float(np.mean(meta[:, 0] == 1)) - 0.5) < 0.01
+    assert float(np.mean(meta[:, 1] == 1)) == pytest.approx(0.001)
+    datlas = DeviceAtlas.from_atlas(atlas)
+    dnf = as_dnf(pred, [2, 2])
+    f_np, a_np, _ = pack_dnf([dnf], v_cap=datlas.v_cap)
+    q = np.eye(vecs.shape[1], dtype=np.float32)[0]
+    passes = jnp.asarray(pred.mask(meta, [2, 2])[None])
+    proc = jnp.zeros((1, 3), bool)
+    args = (jnp.asarray(q[None]), (jnp.asarray(f_np), jnp.asarray(a_np)),
+            proc, jnp.asarray(vecs), passes)
+    seeds0, used0 = datlas.select_anchors_batch(*args, n_seeds=10, c_max=5,
+                                                disjunct_quota=0)
+    s0 = np.asarray(seeds0[0])
+    assert not np.isin(s0, rare_ids).any(), "setup no longer starves"
+    assert not bool(np.asarray(used0)[0, 1])
+    seeds2, used2 = datlas.select_anchors_batch(*args, n_seeds=10, c_max=5,
+                                                disjunct_quota=2)
+    s2 = np.asarray(seeds2[0])
+    assert np.isin(s2, rare_ids).sum() == 2, s2
+    assert bool(np.asarray(used2)[0, 1])  # rare cluster consumed
+    # main seeds still fill the budget; quota displaced, not duplicated
+    assert (s2 >= 0).sum() == 10 and np.unique(s2).size == 10
+
+
+def test_disjunct_quota_end_to_end_recall():
+    """Through the fused engine with default params, the rare disjunct's
+    members (which sit inside the true top-10) are returned — the failure
+    this quota fixes is the loop ending with k dominant-only results."""
+    vecs, meta, atlas, rare_ids = _starved_or_setup()
+    graph = build_alpha_knn(vecs, k=8, r_max=24)
+    index = FiberIndex(vecs, meta, graph, atlas)
+    eng = BatchedEngine(index, BatchedParams(k=10, beam_width=4),
+                        vocab_sizes=(2, 2))
+    pred = Or(In(0, [1]), In(1, [1]))
+    q = np.eye(vecs.shape[1], dtype=np.float32)[0]
+    # precondition: all rare members belong in the exact filtered top-10
+    passing = np.nonzero(pred.mask(meta, [2, 2]))[0]
+    gt = passing[np.argsort(-(vecs[passing] @ q))[:10]]
+    assert np.isin(rare_ids, gt).all(), "setup drifted: rare not in GT"
+    ids, _ = eng.search([Query(vector=q, predicate=pred)])
+    got = np.asarray(ids[0])
+    assert np.isin(rare_ids, got).all(), got
+    assert recall_at_k(got, gt) >= 0.9

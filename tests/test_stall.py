@@ -84,6 +84,67 @@ def test_regime_diagnostics_separate(sweep_run):
     assert t6["genuine_basin"]["b_minus"] == 0
 
 
+@pytest.fixture(scope="module")
+def inserted_sweep_run(small_ds):
+    """The same fixed-seed selectivity sweep, but on an index that absorbed
+    25% of its rows through the dynamic-insert path (capacity slab + graph
+    patch + incremental atlas, DESIGN.md §9) instead of a full build."""
+    from repro.core import AnchorAtlas, FiberIndex, build_alpha_knn
+    from repro.core.batched.insert import (InsertState, emit_anchor_atlas,
+                                           emit_graph, insert_rows,
+                                           make_shard_state)
+    from repro.core.types import Dataset
+
+    n = small_ds.n
+    base_n = n * 3 // 4
+    base = Dataset(small_ds.vectors[:base_n], small_ds.metadata[:base_n],
+                   small_ds.field_names, small_ds.vocab_sizes)
+    graph = build_alpha_knn(base.vectors, k=24, r_max=64, alpha=1.2)
+    atlas = AnchorAtlas.build(base, seed=0)
+    slab = make_shard_state(base.vectors, base.metadata,
+                            np.arange(base_n, dtype=np.int32),
+                            graph.neighbors, atlas, cap=n)
+    state = InsertState(shards=[slab], v_cap=256, graph_k=24, alpha=1.2,
+                        seed=0, next_gid=base_n)
+    for lo in range(base_n, n, 250):
+        hi = min(lo + 250, n)
+        insert_rows(state, small_ds.vectors[lo:hi],
+                    small_ds.metadata[lo:hi])
+    assert state.inserted * 4 >= n  # ≥ 25% of the corpus is dynamic
+    index = FiberIndex(slab.vectors, slab.metadata, emit_graph(slab),
+                       emit_anchor_atlas(slab))
+    qs = make_queries(small_ds, n_queries=100, seed=2)
+    attach_ground_truth(small_ds, qs, k=10)
+    ids, stats = run_queries(index, qs,
+                             SearchParams(k=10, walk="guided", beam_width=4))
+    recalls = [recall_at_k(i, q.gt_ids) for i, q in zip(ids, qs)]
+    sels = [q.selectivity for q in qs]
+    return stats, sels, recalls
+
+
+def test_regimes_still_separate_after_inserts(inserted_sweep_run):
+    """Guard for the paper's core empirical claim under incremental drift:
+    the cut/fold/basin taxonomy must keep its selectivity structure on a
+    dynamically grown index — selective filters stay cut-dominated with
+    (near-)no basins, permissive ones lose cut dominance and grow real
+    basin mass — and recall must not collapse."""
+    stats, sels, recalls = inserted_sweep_run
+    rows = {r["bin"]: r for r in regimes_by_selectivity(stats, sels,
+                                                        recalls)}
+    low = [rows["<0.1%"], rows["0.1%-1%"]]
+    high = [rows["5%-20%"], rows[">20%"]]
+    for r in low + high:
+        assert r["n"] >= 4, "sweep must populate the end bins"
+    for r in low:
+        assert r["topological_cut"] >= 0.6, r
+        assert r["genuine_basin"] <= 0.05, r
+    for r in high:
+        assert r["topological_cut"] <= 0.5, r
+        assert r["genuine_basin"] >= 0.15, r
+    assert rows["<0.1%"]["hops"] > rows[">20%"]["hops"]
+    assert float(np.mean(recalls)) >= 0.75, np.mean(recalls)
+
+
 def test_aggregation_tables(small_index, small_queries):
     params = SearchParams(k=10, walk="guided", beam_width=4)
     ids, stats = run_queries(small_index, small_queries, params)
