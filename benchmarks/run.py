@@ -81,11 +81,15 @@ def kernel_oracle_parity() -> list[str]:
              Or(Range(3, 5, 20), And(In(0, [1, 2]), Not(In(4, [0])))),
              FilterExpr.never(), FilterExpr.always()]
     dnfs = [compile_to_dnf(e, vocab) for e in exprs]
-    f_d, a_d, nd = pack_dnf(dnfs, v_cap=64)
+    # the Range leaf keeps this batch on the bounds-table path
+    f_d, a_d, b_d, nd = pack_dnf(dnfs, v_cap=64)
+    b_dj = None if b_d is None else jnp.asarray(b_d)
     out_dk = np.asarray(ops.filter_eval_batch(
-        meta, jnp.asarray(f_d), jnp.asarray(a_d), jnp.asarray(nd), tn=128))
+        meta, jnp.asarray(f_d), jnp.asarray(a_d), jnp.asarray(nd), b_dj,
+        tn=128))
     _chk("filter_eval_batch/dnf", out_dk,
-         ref.filter_eval_batch(meta, jnp.asarray(f_d), jnp.asarray(a_d)),
+         ref.filter_eval_batch(meta, jnp.asarray(f_d), jnp.asarray(a_d),
+                               bounds=b_dj),
          exact=True)
     meta_np = np.asarray(meta)
     for qi, e in enumerate(exprs):
@@ -93,6 +97,35 @@ def kernel_oracle_parity() -> list[str]:
                              bitorder="little")[: meta_np.shape[0]]
         if not np.array_equal(bits.astype(bool), e.mask(meta_np, vocab)):
             fails.append(f"filter_eval_batch/dnf expr {qi}: "
+                         f"kernel != expression-tree oracle")
+
+    # interval path (DESIGN.md §8): Range clauses over a vocab far beyond
+    # v_cap stay symbolic (f, lo, hi) bounds — kernel vs jnp oracle vs the
+    # expression tree, bit-exact; table bytes independent of vocab width
+    big_vocab = [40] * 5 + [1_000_000]
+    meta_iv = meta.at[:, 5].set(jnp.asarray(
+        rng.integers(-1, big_vocab[5], n), jnp.int32))
+    iv_exprs = [Range(5, 100_000, 600_000),
+                Not(Range(5, 250_000, None)),
+                And(In(0, [3, 4]), Range(5, None, 900_000)),
+                Or(Range(5, 0, 10_000), In(2, [1])),
+                Range(5, 700_000, 10)]  # empty window -> never
+    iv_dnfs = [compile_to_dnf(e, big_vocab, v_cap=64) for e in iv_exprs]
+    f_i, a_i, b_i, nd_i = pack_dnf(iv_dnfs, v_cap=64)
+    out_ik = np.asarray(ops.filter_eval_batch(
+        meta_iv, jnp.asarray(f_i), jnp.asarray(a_i), jnp.asarray(nd_i),
+        jnp.asarray(b_i), tn=128))
+    _chk("filter_eval_batch/interval", out_ik,
+         ref.filter_eval_batch(meta_iv, jnp.asarray(f_i), jnp.asarray(a_i),
+                               bounds=jnp.asarray(b_i)),
+         exact=True)
+    meta_iv_np = np.asarray(meta_iv)
+    for qi, e in enumerate(iv_exprs):
+        bits = np.unpackbits(out_ik[qi].view(np.uint8),
+                             bitorder="little")[: meta_iv_np.shape[0]]
+        if not np.array_equal(bits.astype(bool),
+                              e.mask(meta_iv_np, big_vocab)):
+            fails.append(f"filter_eval_batch/interval expr {qi}: "
                          f"kernel != expression-tree oracle")
     return fails
 

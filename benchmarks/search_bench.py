@@ -17,6 +17,12 @@ two-field ``Or`` predicates with engineered union selectivity, compiled to
 DNF clause tables and evaluated by the in-kernel disjunct union
 (DESIGN.md §8) — still one fused dispatch per batch.
 
+``range_search_bench`` adds interval rows (``range_sel0.5/0.1/0.02``):
+prefix ``Range`` windows over a 2^20-code timestamp field, compiled to
+symbolic bounds tables (never value-sets), with a built-in kernel/oracle
+parity gate and a matched categorical-indicator baseline
+(``recall_catbase``) in every row (DESIGN.md §8).
+
 ``insert_bench`` adds dynamic-insert rows (``insert/b<B>``: rows/sec of
 the append path at batch sizes {64, 256, 1024}; ``post_insert/q64/sel0.1``:
 search QPS + recall on the grown index) — the ingest trajectory next to
@@ -39,8 +45,9 @@ from repro.core.batched.engine import BatchedEngine, BatchedParams
 from repro.core.graph import build_alpha_knn
 from repro.core.search import FiberIndex
 from repro.data.ground_truth import attach_ground_truth, recall_at_k
-from repro.data.synth import (add_or_pair_fields, make_or_queries,
-                              make_selectivity_dataset,
+from repro.data.synth import (add_or_pair_fields, add_timestamp_field,
+                              add_window_indicator_fields, make_or_queries,
+                              make_range_queries, make_selectivity_dataset,
                               make_selectivity_queries)
 
 SELECTIVITIES = (0.5, 0.1, 0.02)
@@ -142,8 +149,8 @@ def or_search_bench(batch_sizes=(64,), or_sels=OR_SELECTIVITIES, *,
         for sel in or_sels:
             batch = pools[sel][:q_n]
             # disjunction kernel vs expression-tree oracle, bit-exact
-            _, f_t, a_t = eng._pack_queries(batch)
-            got = np.asarray(_eval_passes(eng.metadata, f_t, a_t))
+            _, f_t, a_t, b_t = eng._pack_queries(batch)
+            got = np.asarray(_eval_passes(eng.metadata, f_t, a_t, b_t))
             want = np.asarray(pack_bits(jnp.asarray(np.stack(
                 [q.predicate.mask(ds.metadata, ds.vocab_sizes)
                  for q in batch]))))
@@ -157,6 +164,80 @@ def or_search_bench(batch_sizes=(64,), or_sels=OR_SELECTIVITIES, *,
             row.update(n_disjuncts=2,
                        clause_table_shape=list(np.asarray(f_t).shape),
                        mask_state_bytes=3 * q_n * n_words * 4)
+            out[key] = row
+    return out
+
+
+def range_search_bench(batch_sizes=(64,), range_sels=SELECTIVITIES, *,
+                       n: int = 8000, d: int = 64, k: int = 10,
+                       reps: int = 20, graph_k: int = 16,
+                       seed: int = 7) -> dict:
+    """Range-predicate rows (``range_sel<sel>``): the ``search_bench``
+    corpus with an extra ~10^6-vocab timestamp field, queried with prefix
+    ``Range`` windows of engineered selectivity. These compile to symbolic
+    interval clauses — the clause tables stay O(clauses), never O(window
+    width) — and each row asserts kernel/oracle bitmap parity on its batch
+    and records the bounds-table footprint next to the recall number.
+    Each row also re-runs the SAME query vectors against a binary
+    indicator field marking exactly the window's rows (the matched
+    categorical baseline through the legacy value-set path) and reports
+    that recall as ``recall_catbase`` — the interval path must stay
+    within 2 points of it."""
+    import jax.numpy as jnp
+
+    from repro.core.batched.bitmap import pack_bits
+    from repro.core.batched.engine import _eval_passes
+    from repro.core.types import FilterPredicate, Query
+
+    ds = add_timestamp_field(
+        make_selectivity_dataset(SELECTIVITIES, n=n, d=d, n_components=24,
+                                 seed=seed))
+    ds = add_window_indicator_fields(ds, range_sels)
+    graph = build_alpha_knn(ds.vectors, k=graph_k, r_max=3 * graph_k,
+                            alpha=1.2)
+    atlas = AnchorAtlas.build(ds, seed=0)
+    index = FiberIndex(ds.vectors, ds.metadata, graph, atlas)
+    eng = BatchedEngine(index, BatchedParams(k=k, beam_width=4),
+                        vocab_sizes=ds.vocab_sizes)
+    n_words = (n + 31) // 32
+    out: dict = {}
+    q_max = max(batch_sizes)
+    pools = {}
+    for sel in range_sels:
+        qs = make_range_queries(ds, sel, q_max)
+        attach_ground_truth(ds, qs, k=k)
+        pools[sel] = qs
+    for q_n in batch_sizes:
+        for sel in range_sels:
+            batch = pools[sel][:q_n]
+            # interval kernel vs expression-tree oracle, bit-exact
+            _, f_t, a_t, b_t = eng._pack_queries(batch)
+            got = np.asarray(_eval_passes(eng.metadata, f_t, a_t, b_t))
+            want = np.asarray(pack_bits(jnp.asarray(np.stack(
+                [q.predicate.mask(ds.metadata, ds.vocab_sizes)
+                 for q in batch]))))
+            if not np.array_equal(got, want):
+                raise AssertionError(
+                    f"interval kernel/oracle bitmap mismatch at "
+                    f"range_sel{sel}")
+            key = (f"range_sel{sel}" if len(batch_sizes) == 1
+                   else f"q{q_n}/range_sel{sel}")
+            row = measure_batch(eng, batch, reps)
+            # matched categorical baseline: same vectors, same mask,
+            # filtered through the indicator field's value-set bitmap
+            wf = ds.field_names.index(f"win{sel}")
+            twin_pred = FilterPredicate.make({wf: [1]})
+            twins = [Query(vector=q.vector, predicate=twin_pred,
+                           selectivity=q.selectivity) for q in batch]
+            attach_ground_truth(ds, twins, k=k)
+            cat_row = measure_batch(eng, twins, reps)
+            row.update(
+                ts_domain=ds.vocab_sizes[ds.field_names.index("ts")],
+                recall_catbase=cat_row["recall"],
+                bounds_table_bytes=(0 if b_t is None
+                                    else int(np.asarray(b_t).nbytes)),
+                clause_table_shape=list(np.asarray(f_t).shape),
+                mask_state_bytes=3 * q_n * n_words * 4)
             out[key] = row
     return out
 
@@ -272,6 +353,12 @@ def main(smoke: bool = False) -> dict:
         results.update(or_search_bench(
             batch_sizes=(2,), or_sels=(0.3,), n=600, d=16, k=5, reps=1,
             graph_k=8))
+        # and the interval path: a Range window over a ~10^6-vocab
+        # timestamp field through the symbolic bounds tables, with its
+        # built-in kernel/oracle bitmap parity gate
+        results.update(range_search_bench(
+            batch_sizes=(2,), range_sels=(0.3,), n=600, d=16, k=5, reps=1,
+            graph_k=8))
         # and the dynamic-insert path: append through the capacity slab,
         # then search the grown index
         results.update(insert_bench(batch_sizes=(8,), n=600, d=16, k=5,
@@ -280,6 +367,7 @@ def main(smoke: bool = False) -> dict:
         results = search_bench()
         results.update(sharded_search_bench())
         results.update(or_search_bench())
+        results.update(range_search_bench())
         results.update(insert_bench())
         write_baseline(results)
     return results

@@ -11,7 +11,18 @@ import dataclasses
 import numpy as np
 
 from repro.core.kmeans import kmeans
+from repro.core.predicate import Interval
 from repro.core.types import Dataset, FilterPredicate
+
+
+def _spec_keys(spec, by_key: dict) -> list:
+    """Keys of ``by_key`` selected by a clause spec: literal membership for
+    value-sets, a dict-key scan for symbolic intervals (exact — the dict
+    holds only codes actually present, so the scan is O(#distinct codes),
+    never O(interval width))."""
+    if isinstance(spec, Interval):
+        return [v for v in by_key if spec.lo <= v <= spec.hi]
+    return [v for v in spec if v in by_key]
 
 
 def _disjuncts(pred) -> tuple:
@@ -91,7 +102,7 @@ class AnchorAtlas:
         acc: np.ndarray | None = None
         for f, allowed in clauses:
             idx = self.cluster_index[f]
-            cs = [idx[v] for v in allowed if v in idx]
+            cs = [idx[v] for v in _spec_keys(allowed, idx)]
             cur = (np.unique(np.concatenate(cs)) if cs
                    else np.empty(0, dtype=np.int32))
             acc = cur if acc is None else np.intersect1d(acc, cur,
@@ -113,7 +124,7 @@ class AnchorAtlas:
         acc: np.ndarray | None = None
         for f, allowed in clauses:
             by_val = self.members[c][f]
-            parts = [by_val[v] for v in allowed if v in by_val]
+            parts = [by_val[v] for v in _spec_keys(allowed, by_val)]
             cur = (np.unique(np.concatenate(parts)) if parts
                    else np.empty(0, dtype=np.int32))
             acc = cur if acc is None else np.intersect1d(acc, cur,

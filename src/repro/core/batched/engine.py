@@ -36,7 +36,7 @@ from repro.core.batched.bitmap import (n_words, pack_bits, popcount,
                                        set_bits, test_bits, unpack_bits)
 from repro.core.device_atlas import (DeviceAtlas, pack_dnf, pack_predicates,
                                      table_n_disj)
-from repro.core.predicate import as_dnf
+from repro.core.predicate import DNF, as_dnf, disjunct_selectivity
 from repro.core.search import FiberIndex, SearchParams
 from repro.core.types import FilterPredicate, Query
 from repro.kernels import ref
@@ -90,18 +90,20 @@ def _expand_scores(q_vecs, vectors, nbrs, pass_bm):
     return ref.fiber_expand_walk(q_vecs, vectors, nbrs, pass_bm)
 
 
-def _eval_passes(metadata, fields, allowed):
+def _eval_passes(metadata, fields, allowed, bounds=None):
     """Batched predicate evaluation -> packed (Q, ceil(n/32)) uint32 pass
     bitmaps: the filter_eval Pallas corpus sweep on TPU, the jnp oracle
     elsewhere. Disjunctive (Q, D, C) tables carry their live-disjunct
     counts in the dead-disjunct sentinel; the kernels OR the per-disjunct
-    conjunctive bitmaps in the same sweep (DESIGN.md §8)."""
+    conjunctive bitmaps in the same sweep (DESIGN.md §8). ``bounds``
+    (Q, D, C, 2) marks interval clauses (evaluated as two comparisons,
+    short-circuited rarest-first; None keeps legacy programs)."""
     n_disj = table_n_disj(fields) if fields.ndim == 3 else None
     if jax.default_backend() == "tpu":
         from repro.kernels.filter_eval import filter_eval_batch
-        return filter_eval_batch(metadata, fields, allowed, n_disj,
+        return filter_eval_batch(metadata, fields, allowed, n_disj, bounds,
                                  interpret=False)
-    return ref.filter_eval_batch(metadata, fields, allowed, n_disj)
+    return ref.filter_eval_batch(metadata, fields, allowed, n_disj, bounds)
 
 
 def walk_batch(vectors, adjacency, pass_bm, q_vecs, seeds,
@@ -272,7 +274,7 @@ def walk_batch(vectors, adjacency, pass_bm, q_vecs, seeds,
 
 def atlas_round(datlas: DeviceAtlas, vectors, adjacency, pass_bm, passes,
                 q_vecs, fields, allowed, processed, need, res_v, res_i,
-                p: BatchedParams, seed_backend: str):
+                p: BatchedParams, seed_backend: str, bounds=None):
     """One full restart round for all Q queries on device: batched anchor
     selection from the packed atlas, then the lockstep walk. ``pass_bm``
     is the packed (Q, ceil(n/32)) uint32 filter bitmap the walk carries;
@@ -280,10 +282,13 @@ def atlas_round(datlas: DeviceAtlas, vectors, adjacency, pass_bm, passes,
     round-invariant, so callers unpack once per batch instead of once per
     round. Queries with ``need`` false see an all-processed atlas and so
     get no seeds; a query with no seeds converges on its first walk
-    iteration with its results untouched."""
+    iteration with its results untouched. ``bounds`` rides with the clause
+    tables for interval clauses (None = pure value-set batch)."""
     gate = processed | ~need[:, None]
+    tables = ((fields, allowed) if bounds is None
+              else (fields, allowed, bounds))
     seeds, used = datlas.select_anchors_batch(
-        q_vecs, (fields, allowed), gate, vectors, passes,
+        q_vecs, tables, gate, vectors, passes,
         n_seeds=p.n_seeds, c_max=p.c_max, backend=seed_backend,
         disjunct_quota=p.disjunct_quota)
     out = walk_batch(vectors, adjacency, pass_bm, q_vecs, seeds, p,
@@ -296,7 +301,7 @@ def atlas_round(datlas: DeviceAtlas, vectors, adjacency, pass_bm, passes,
 
 def search_batch(datlas: DeviceAtlas, vectors, adjacency, metadata, q_vecs,
                  fields, allowed, p: BatchedParams, seed_backend: str,
-                 valid_bm=None):
+                 valid_bm=None, bounds=None):
     """A whole filtered search batch as ONE device program: batched
     predicate evaluation, then a ``lax.while_loop`` over restart rounds
     (each round = ``atlas_round``). "Anyone seeded?" / "anyone still short
@@ -312,7 +317,7 @@ def search_batch(datlas: DeviceAtlas, vectors, adjacency, metadata, q_vecs,
     predicate, which an empty clause table would otherwise let through.
     """
     Q = q_vecs.shape[0]
-    pass_bm = _eval_passes(metadata, fields, allowed)
+    pass_bm = _eval_passes(metadata, fields, allowed, bounds)
     if valid_bm is not None:
         pass_bm = pass_bm & valid_bm[None, :]
     # the dense unpack feeds only selection math and is round-invariant:
@@ -337,7 +342,7 @@ def search_batch(datlas: DeviceAtlas, vectors, adjacency, metadata, q_vecs,
         out = atlas_round(datlas, vectors, adjacency, pass_bm, passes,
                           q_vecs, fields, allowed, c["processed"], c["need"],
                           c["res_v"], c["res_i"], p=p,
-                          seed_backend=seed_backend)
+                          seed_backend=seed_backend, bounds=bounds)
         seeded = out["seeded"]
         any_seeded = seeded.any()
         res_v = jnp.where(any_seeded, out["res_v"], c["res_v"])
@@ -376,6 +381,20 @@ def disjunct_dim(n_disjuncts: int) -> int:
     return 1 << (n_disjuncts - 1).bit_length()
 
 
+def _compile_query_dnf(pred, vocab_sizes, v_cap: int):
+    """Per-query predicate normalization for the batch pack: conjunctive
+    FilterPredicates whose every value fits the bitmap pass through
+    verbatim (legacy tables stay byte-identical); everything else —
+    expressions, precompiled DNFs, and FilterPredicates carrying codes
+    beyond ``v_cap`` — compiles v_cap-aware so oversized values lower to
+    interval clauses instead of unpackable bitmap bits."""
+    if isinstance(pred, FilterPredicate):
+        if all(v < v_cap for _, vals in pred.clauses for v in vals):
+            return pred
+        pred = pred.expr()
+    return as_dnf(pred, vocab_sizes, v_cap=v_cap)
+
+
 def pack_query_batch(queries: list[Query], *, v_cap: int,
                      vocab_sizes=None):
     """Host-side query pack shared by the single-device and sharded
@@ -384,28 +403,44 @@ def pack_query_batch(queries: list[Query], *, v_cap: int,
 
     Predicates may be conjunctive ``FilterPredicate``s, ``FilterExpr``
     trees, or precompiled ``DNF``s; expressions compile against
-    ``vocab_sizes`` (Not/Range lowering). When every predicate lowers to
-    ≤ 1 disjunct the tables keep the legacy (Q, C) conjunctive shape —
-    byte-identical to the pre-algebra pack, so existing compiled programs
-    are reused — otherwise they widen to (Q, D, C) with D bucketed by
-    ``disjunct_dim``."""
+    ``vocab_sizes`` (Not/Range lowering) with ``v_cap`` steering
+    large-domain leaves to interval clauses. When every predicate lowers
+    to ≤ 1 disjunct of pure value-sets the tables keep the legacy (Q, C)
+    conjunctive shape — byte-identical to the pre-algebra pack, so
+    existing compiled programs are reused — otherwise they widen to
+    (Q, D, C) with D bucketed by ``disjunct_dim``. Returns
+    (q_vecs, fields, allowed, bounds): ``bounds`` is the (Q, D, C, 2)
+    interval table when any clause is an interval (its disjuncts packed
+    rarest-first for the kernel's short-circuit), else None — the
+    invariant is ``bounds is not None ⟹ fields.ndim == 3``."""
     q_vecs = jnp.asarray(np.stack([q.vector for q in queries]))
-    dnfs = [q.predicate if isinstance(q.predicate, FilterPredicate)
-            else as_dnf(q.predicate, vocab_sizes) for q in queries]
+    dnfs = [_compile_query_dnf(q.predicate, vocab_sizes, v_cap)
+            for q in queries]
     d_max = max((1 if isinstance(p, FilterPredicate) else p.n_disjuncts
                  for p in dnfs), default=0)
-    if d_max <= 1:
+    has_iv = any(isinstance(p, DNF) and p.has_intervals for p in dnfs)
+    if d_max <= 1 and not has_iv:
         preds = [p if isinstance(p, FilterPredicate) else p.to_predicate()
                  for p in dnfs]
         n_cl = max((p.n_clauses for p in preds), default=0)
         f_np, a_np = pack_predicates(preds, max_clauses=clause_dim(n_cl),
                                      v_cap=v_cap)
-    else:
-        dnfs = [as_dnf(p) for p in dnfs]
-        n_cl = max((p.max_clauses for p in dnfs), default=0)
-        f_np, a_np, _ = pack_dnf(dnfs, max_disjuncts=disjunct_dim(d_max),
-                                 max_clauses=clause_dim(n_cl), v_cap=v_cap)
-    return q_vecs, jnp.asarray(f_np), jnp.asarray(a_np)
+        return q_vecs, jnp.asarray(f_np), jnp.asarray(a_np), None
+    dnfs = [as_dnf(p) for p in dnfs]
+    if has_iv:
+        # rare disjuncts first: the interval kernel short-circuits the
+        # tail once a tile saturates, so the broad disjuncts go last
+        # (union semantics are order-independent; quota repair is
+        # per-disjunct and follows the same order on every path)
+        dnfs = [DNF(tuple(sorted(
+            d.disjuncts,
+            key=lambda c: disjunct_selectivity(c, vocab_sizes))))
+            for d in dnfs]
+    n_cl = max((p.max_clauses for p in dnfs), default=0)
+    f_np, a_np, b_np, _ = pack_dnf(dnfs, max_disjuncts=disjunct_dim(d_max),
+                                   max_clauses=clause_dim(n_cl), v_cap=v_cap)
+    bounds = jnp.asarray(b_np) if has_iv else None
+    return q_vecs, jnp.asarray(f_np), jnp.asarray(a_np), bounds
 
 
 class BatchedEngine:
@@ -517,6 +552,10 @@ class BatchedEngine:
         self.datlas = emit_device_atlas(slab, self.datlas.v_cap)
         self._valid_bm = pack_bits(jnp.asarray(slab.valid))
         self.vocab_sizes = self._state.expand_vocab(self.vocab_sizes)
+        # keep the sequential path's memoized domains in sync: Not /
+        # open-ended-Range lowering reads index.vocab_sizes(), which would
+        # otherwise silently miss codes first introduced by this ingest
+        self.index.extend_vocab(self.vocab_sizes)
         return gids
 
     @property
@@ -534,10 +573,10 @@ class BatchedEngine:
         (seeds are nearest matching members, never random samples)."""
         del seed
         Q = len(queries)
-        q_vecs, fields, allowed = self._pack_queries(queries)
+        q_vecs, fields, allowed, bounds = self._pack_queries(queries)
         out = self._search(self.datlas, self.vectors, self.adjacency,
                            self.metadata, q_vecs, fields, allowed,
-                           valid_bm=self._valid_bm)
+                           valid_bm=self._valid_bm, bounds=bounds)
         self.dispatches += 1
         host = jax.device_get(out)  # the batch's single host sync
         res_v, res_i = host["res_v"], host["res_i"]
@@ -553,8 +592,8 @@ class BatchedEngine:
         del seed
         p = self.p
         Q = len(queries)
-        q_vecs, fields, allowed = self._pack_queries(queries)
-        pass_bm = self._passes(self.metadata, fields, allowed)
+        q_vecs, fields, allowed, bounds = self._pack_queries(queries)
+        pass_bm = self._passes(self.metadata, fields, allowed, bounds)
         if self._valid_bm is not None:  # capacity slab: mask unwritten rows
             pass_bm = pass_bm & self._valid_bm[None, :]
         self.dispatches += 1
@@ -567,7 +606,7 @@ class BatchedEngine:
         for _ in range(p.jump_budget + 1):
             out = self._round(self.datlas, self.vectors, self.adjacency,
                               pass_bm, passes, q_vecs, fields, allowed,
-                              processed, need, res_v, res_i)
+                              processed, need, res_v, res_i, bounds=bounds)
             self.dispatches += 1
             seeded = np.asarray(out["seeded"])
             # the buffers donated into the call are dead now: rebind results

@@ -287,21 +287,27 @@ def emit_device_atlas(sh: ShardState, v_cap: int) -> DeviceAtlas:
     assign_full[:n_valid] = a_v
     f_count = sh.metadata.shape[1]
     pres = np.zeros((f_count, k, n_words(v_cap)), np.uint32)
+    cmin = np.full((f_count, k), np.int32(2**31 - 1), np.int32)
+    cmax = np.full((f_count, k), -1, np.int32)
     for f in range(f_count):
         codes = sh.metadata[:n_valid, f]
-        if codes.max(initial=-1) >= v_cap:
-            raise ValueError(
-                f"metadata code {int(codes.max())} out of DeviceAtlas "
-                f"range [0, {v_cap}); rebuild with a larger v_cap")
         ok = codes >= 0
-        v = codes[ok].astype(np.uint32)
+        np.minimum.at(cmin[f], a_v[ok], codes[ok])
+        np.maximum.at(cmax[f], a_v[ok], codes[ok])
+        # Codes at/above v_cap get no presence bit, same as the auto-v_cap
+        # path of DeviceAtlas.from_atlas: value-set clauses can never name
+        # them (pack_dnf lowers such In values to intervals), and interval
+        # clauses prune clusters through the cmin/cmax envelope instead.
+        inb = ok & (codes < v_cap)
+        v = codes[inb].astype(np.uint32)
         bits = np.left_shift(np.ones_like(v), v & np.uint32(31))
-        np.bitwise_or.at(pres[f], (a_v[ok], v >> np.uint32(5)), bits)
+        np.bitwise_or.at(pres[f], (a_v[inb], v >> np.uint32(5)), bits)
     return DeviceAtlas(
         jnp.asarray(sh.atlas.centroids, jnp.float32),
         jnp.asarray(assign_full), jnp.asarray(csr_pts),
         jnp.asarray(offsets, jnp.int32), jnp.asarray(inv_perm),
-        jnp.asarray(pres), v_cap=v_cap)
+        jnp.asarray(pres), jnp.asarray(cmin), jnp.asarray(cmax),
+        v_cap=v_cap)
 
 
 def emit_graph(sh: ShardState) -> Graph:

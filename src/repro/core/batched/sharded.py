@@ -198,26 +198,28 @@ class ShardedEngine:
         self.v_cap = sindex.datlas.v_cap
         self.vocab_sizes = sindex.vocab_sizes
         self.n, self.n_shards = sindex.n, s
-        self._search = self._build_program()
+        self._search = self._build_program(has_bounds=False)
+        self._search_iv = None  # built lazily on the first interval query
         self._ref = jax.jit(
-            lambda datlas, vec, adj, meta, vbm, qv, f, a: search_batch(
+            lambda datlas, vec, adj, meta, vbm, qv, f, a, b: search_batch(
                 datlas, vec, adj, meta, qv, f, a, params, seed_backend,
-                valid_bm=vbm))
+                valid_bm=vbm, bounds=b))
         self.dispatches = 0
 
-    def _build_program(self):
+    def _build_program(self, has_bounds: bool):
         axis, p, sb = self.axis, self.p, self._seed_backend
         nl, tdef = len(self._leaves), self._tdef
 
         def fn(*args):
             leaves, rest = args[:nl], args[nl:]
             vectors, adjacency, metadata, global_ids, valid_bm = rest[:5]
-            q_vecs, fields, allowed = rest[5:]
+            q_vecs, fields, allowed = rest[5:8]
+            bounds = rest[8] if has_bounds else None
             datlas = jax.tree_util.tree_unflatten(
                 tdef, [l[0] for l in leaves])
             out = search_batch(datlas, vectors[0], adjacency[0], metadata[0],
                                q_vecs, fields, allowed, p, sb,
-                               valid_bm=valid_bm[0])
+                               valid_bm=valid_bm[0], bounds=bounds)
             gids = jnp.where(out["res_i"] >= 0,
                              global_ids[0][jnp.maximum(out["res_i"], 0)], -1)
             all_v = jax.lax.all_gather(out["res_v"], axis)
@@ -227,7 +229,10 @@ class ShardedEngine:
                         hops=jax.lax.psum(out["hops"], axis),
                         walks=jax.lax.psum(out["walks"], axis))
 
-        in_specs = tuple([P(axis)] * (nl + 5) + [P(), P(), P()])
+        # queries (and the bounds table, when the batch carries interval
+        # clauses) are replicated; everything else is partitioned row-wise
+        n_rep = 4 if has_bounds else 3
+        in_specs = tuple([P(axis)] * (nl + 5) + [P()] * n_rep)
         return jax.jit(shard_map(fn, mesh=self.mesh, in_specs=in_specs,
                                  out_specs=P(), check_vma=False))
 
@@ -301,11 +306,17 @@ class ShardedEngine:
         dispatch, one host sync. Stats sum device work over shards (every
         shard walks every query)."""
         del seed
-        q_vecs, fields, allowed = pack_query_batch(
+        q_vecs, fields, allowed, bounds = pack_query_batch(
             queries, v_cap=self.v_cap, vocab_sizes=self.vocab_sizes)
-        out = self._search(*self._leaves, self.vectors, self.adjacency,
-                           self.metadata, self.global_ids, self.valid_bm,
-                           q_vecs, fields, allowed)
+        args = (*self._leaves, self.vectors, self.adjacency,
+                self.metadata, self.global_ids, self.valid_bm,
+                q_vecs, fields, allowed)
+        if bounds is None:
+            out = self._search(*args)
+        else:
+            if self._search_iv is None:
+                self._search_iv = self._build_program(has_bounds=True)
+            out = self._search_iv(*args, bounds)
         self.dispatches += 1
         return self._fetch(out, len(queries))
 
@@ -315,7 +326,7 @@ class ShardedEngine:
         device, merged by the same ``merge_topk`` in the same shard order.
         The mesh path must match this bit-for-bit (tested at selectivities
         {0.5, 0.1, 0.02})."""
-        q_vecs, fields, allowed = pack_query_batch(
+        q_vecs, fields, allowed, bounds = pack_query_batch(
             queries, v_cap=self.v_cap, vocab_sizes=self.vocab_sizes)
         per_v, per_i, hops, walks = [], [], 0, 0
         for s in range(self.n_shards):
@@ -323,7 +334,7 @@ class ShardedEngine:
                 self._tdef, [l[s] for l in self._leaves])
             out = self._ref(datlas, self.vectors[s], self.adjacency[s],
                             self.metadata[s], self.valid_bm[s],
-                            q_vecs, fields, allowed)
+                            q_vecs, fields, allowed, bounds)
             per_v.append(out["res_v"])
             per_i.append(jnp.where(
                 out["res_i"] >= 0,

@@ -33,6 +33,7 @@ import numpy as np
 
 from repro.core.batched.bitmap import pack_bits
 from repro.core.batched.bitmap import n_words as _n_words
+from repro.core.predicate import Interval
 # sentinel + device-side count derivation live with the kernels that
 # consume the tables; re-exported here next to the packers that emit them
 from repro.kernels.filter_eval import DEAD_DISJUNCT, table_n_disj
@@ -41,26 +42,53 @@ from repro.kernels.ops import V_CAP
 NEG = jnp.float32(-3.4e38)
 MEMBER_CAP = 4096  # mirrors AnchorAtlas.cluster_members_matching's cap
 
+# ceiling on the *auto-sized* value-bitmap width: beyond this, per-value
+# presence bitmaps would scale device memory with the vocabulary (the very
+# blow-up interval clauses exist to avoid), so codes past the cap are
+# tracked only by the per-cluster [code_min, code_max] envelope and served
+# by interval clauses. An explicit v_cap still sizes exactly as asked.
+AUTO_V_CAP_MAX = 1024
+
+INT32_MAX = np.int32(2**31 - 1)
+
 
 def auto_v_cap(vmax: int) -> int:
     """Value-bitmap width for a corpus whose largest metadata code is
     ``vmax``: at least V_CAP (common small vocabularies share one width),
-    else the next 32-bit word boundary — the ONE sizing rule shared by
-    atlas packing and both engines' capacity-slab builds."""
-    return max(V_CAP, 32 * _n_words(vmax + 1))
+    else the next 32-bit word boundary, ceilinged at AUTO_V_CAP_MAX so a
+    vocab-10^6 timestamp field doesn't allocate megabit presence rows —
+    the ONE sizing rule shared by atlas packing and both engines'
+    capacity-slab builds."""
+    return min(max(V_CAP, 32 * _n_words(vmax + 1)), AUTO_V_CAP_MAX)
 
 
 def _pack_clauses(clauses, fields_row: np.ndarray, allowed_row: np.ndarray,
-                  v_cap: int) -> None:
+                  v_cap: int, bounds_row: np.ndarray | None = None) -> None:
     """Write one conjunctive clause list into a (C,) fields row + a
-    (C, Wv) value-bitmap row. Values ≥ v_cap are dropped: no point holds
-    them (the atlas inverted index has no posting), so the clause
-    contributes an empty match, same as the host path."""
-    for ci, (f, vals) in enumerate(clauses):
+    (C, Wv) value-bitmap row (+ optionally a (C, 2) interval-bounds row).
+    An ``Interval`` spec writes only its bounds — the bitmap row stays
+    zero and the kernels dispatch on ``lo <= hi``. Negative values are
+    dropped (code -1 = unpopulated can never match); a non-negative value
+    ≥ v_cap cannot be represented in the bitmap and raises — compile with
+    ``v_cap=`` so such values lower to interval clauses instead."""
+    for ci, (f, spec) in enumerate(clauses):
         fields_row[ci] = f
-        for v in vals:
+        if isinstance(spec, Interval):
+            if bounds_row is None:
+                raise ValueError(
+                    "interval clause in a value-set-only table; pack via "
+                    "pack_dnf (bounds-capable) instead of pack_predicates")
+            bounds_row[ci, 0] = max(spec.lo, 0)
+            bounds_row[ci, 1] = min(spec.hi, int(INT32_MAX))
+            continue
+        for v in spec:
             if 0 <= v < v_cap:
                 allowed_row[ci, v >> 5] |= np.uint32(1) << np.uint32(v & 31)
+            elif v >= v_cap:
+                raise ValueError(
+                    f"clause value {v} >= v_cap={v_cap} cannot pack into "
+                    f"the value bitmap; compile the predicate with "
+                    f"v_cap={v_cap} so it lowers to interval clauses")
 
 
 def pack_predicates(preds, *, max_clauses: int | None = None,
@@ -80,16 +108,21 @@ def pack_predicates(preds, *, max_clauses: int | None = None,
 
 
 def pack_dnf(dnfs, *, max_disjuncts: int | None = None,
-             max_clauses: int | None = None,
-             v_cap: int = V_CAP) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+             max_clauses: int | None = None, v_cap: int = V_CAP,
+             ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
     """Compiled DNF predicates -> disjunctive clause tables:
     fields (Q, D, C) i32 (-1 inactive clause, DEAD_DISJUNCT = -2 for the
     dead-disjunct padding tail), allowed (Q, D, C, ceil(v_cap/32)) u32
-    value bitmaps, n_disj (Q,) i32 per-query live-disjunct counts. Disjunct
-    d of query q is the same conjunctive table ``pack_predicates`` emits
-    (shared ``_pack_clauses``); the kernels OR the per-disjunct pass words
-    (DESIGN.md §8). Live disjuncts pack densely from 0, so ``table_n_disj``
-    recovers the counts on device."""
+    value bitmaps, bounds (Q, D, C, 2) i32 interval-bounds rows, n_disj
+    (Q,) i32 per-query live-disjunct counts. A clause is *either* a
+    value-set (its bitmap populated, bounds at the inert (0, -1) sentinel)
+    *or* an interval (bounds = [lo, hi] with lo <= hi, bitmap zero) — the
+    kernels dispatch per clause on ``lo <= hi``, so bounds bytes are O(1)
+    in the field's vocabulary. Disjunct d of query q is the same
+    conjunctive table ``pack_predicates`` emits (shared ``_pack_clauses``);
+    the kernels OR the per-disjunct pass words (DESIGN.md §8). Live
+    disjuncts pack densely from 0, so ``table_n_disj`` recovers the counts
+    on device."""
     n_dj = max((d.n_disjuncts for d in dnfs), default=0)
     D = max(1, n_dj) if max_disjuncts is None else max_disjuncts
     if n_dj > D:
@@ -102,13 +135,16 @@ def pack_dnf(dnfs, *, max_disjuncts: int | None = None,
     Q = len(dnfs)
     fields = np.full((Q, D, C), DEAD_DISJUNCT, np.int32)
     allowed = np.zeros((Q, D, C, _n_words(v_cap)), np.uint32)
+    bounds = np.zeros((Q, D, C, 2), np.int32)
+    bounds[..., 1] = -1
     n_disj = np.zeros(Q, np.int32)
     for qi, dnf in enumerate(dnfs):
         n_disj[qi] = dnf.n_disjuncts
         for di, clauses in enumerate(dnf.disjuncts):
             fields[qi, di, :] = -1
-            _pack_clauses(clauses, fields[qi, di], allowed[qi, di], v_cap)
-    return fields, allowed, n_disj
+            _pack_clauses(clauses, fields[qi, di], allowed[qi, di], v_cap,
+                          bounds[qi, di])
+    return fields, allowed, bounds, n_disj
 
 
 # canonical packer lives in core/batched/bitmap.py; kept under the original
@@ -144,11 +180,18 @@ class DeviceAtlas:
     csr_offsets: jax.Array  # (K+1,) i32
     inv_perm: jax.Array     # (n,) i32 point id -> position in csr_pts
     presence: jax.Array     # (F, K, W) u32 cluster/field/value bitmap
+    code_min: jax.Array     # (F, K) i32 smallest code present (INT32_MAX if
+    #                         the cluster holds no populated code on field f)
+    code_max: jax.Array     # (F, K) i32 largest code present (-1 if none);
+    #                         the [code_min, code_max] envelope is the
+    #                         interval-clause cluster-match test — exact
+    #                         codes >= v_cap never enter the presence bitmap
     v_cap: int = V_CAP
 
     def tree_flatten(self):
         return ((self.centroids, self.assign, self.csr_pts, self.csr_offsets,
-                 self.inv_perm, self.presence), (self.v_cap,))
+                 self.inv_perm, self.presence, self.code_min, self.code_max),
+                (self.v_cap,))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -163,10 +206,14 @@ class DeviceAtlas:
         """CSR/bitmap-pack a host AnchorAtlas (numpy build, arrays land on
         the default device). ``v_cap=None`` auto-sizes to the largest
         metadata code in the inverted index (≥ V_CAP, rounded up to a
-        32-bit word); an explicit v_cap must cover every code."""
+        32-bit word, ceilinged at AUTO_V_CAP_MAX) — codes beyond the
+        auto ceiling are tracked only by the per-cluster code_min/code_max
+        envelope and must be queried through interval clauses. An explicit
+        v_cap must cover every code (fails loudly otherwise)."""
         assign = np.asarray(atlas.assign, np.int32)
         n = assign.shape[0]
         k = atlas.n_clusters
+        explicit = v_cap is not None
         if v_cap is None:
             vmax = max((v for by_f in atlas.cluster_index for v in by_f),
                        default=-1)
@@ -178,17 +225,24 @@ class DeviceAtlas:
         inv_perm[order] = np.arange(n, dtype=np.int32)
         f_count = len(atlas.cluster_index)
         pres = np.zeros((f_count, k, _n_words(v_cap)), np.uint32)
+        cmin = np.full((f_count, k), INT32_MAX, np.int32)
+        cmax = np.full((f_count, k), -1, np.int32)
         for f in range(f_count):
             for v, clusters in atlas.cluster_index[f].items():
-                if not 0 <= v < v_cap:
+                if v < 0 or (explicit and v >= v_cap):
                     raise ValueError(
                         f"metadata code {v} out of DeviceAtlas range "
                         f"[0, {v_cap}); rebuild with a larger v_cap")
-                pres[f, clusters, v >> 5] |= np.uint32(1) << np.uint32(v & 31)
+                cmin[f, clusters] = np.minimum(cmin[f, clusters], v)
+                cmax[f, clusters] = np.maximum(cmax[f, clusters], v)
+                if v < v_cap:
+                    pres[f, clusters, v >> 5] |= (np.uint32(1)
+                                                  << np.uint32(v & 31))
         return DeviceAtlas(
             jnp.asarray(atlas.centroids, jnp.float32), jnp.asarray(assign),
             jnp.asarray(order), jnp.asarray(offsets, jnp.int32),
-            jnp.asarray(inv_perm), jnp.asarray(pres), v_cap=v_cap)
+            jnp.asarray(inv_perm), jnp.asarray(pres), jnp.asarray(cmin),
+            jnp.asarray(cmax), v_cap=v_cap)
 
     def pad_rows(self, m: int) -> "DeviceAtlas":
         """Extend the point-indexed arrays to ``m`` rows with inert pad
@@ -212,29 +266,40 @@ class DeviceAtlas:
             jnp.concatenate([self.csr_pts, tail]),
             self.csr_offsets,
             jnp.concatenate([self.inv_perm, tail]),
-            self.presence, v_cap=self.v_cap)
+            self.presence, self.code_min, self.code_max, v_cap=self.v_cap)
 
     # -- batched query-time operations (all jittable, fixed shapes) ----------
-    def matching_clusters_batch(self, fields: jax.Array,
-                                allowed: jax.Array) -> jax.Array:
+    def matching_clusters_batch(self, fields: jax.Array, allowed: jax.Array,
+                                bounds: jax.Array | None = None) -> jax.Array:
         """Clause tables -> (Q, K) bool match mask (host matching_clusters
         for every query at once): AND over active clauses of 'cluster has
         ≥1 point with an allowed value on that field'. Disjunctive (Q, D, C)
         tables (``pack_dnf``) OR the per-disjunct conjunctive masks, with
-        dead disjuncts contributing False."""
+        dead disjuncts contributing False. Interval clauses (``bounds``
+        rows with lo <= hi) use the conservative per-cluster
+        [code_min, code_max] envelope-overlap test — a superset of the
+        exact host match, safe because matched *counts* still gate which
+        clusters yield seeds."""
         if fields.ndim == 3:
-            return self._disjunct_cluster_masks(fields, allowed).any(axis=1)
+            return self._disjunct_cluster_masks(fields, allowed,
+                                                bounds).any(axis=1)
         pres = self.presence[jnp.maximum(fields, 0)]        # (Q, C, K, W)
         hit = ((pres & allowed[:, :, None, :]) != 0).any(-1)  # (Q, C, K)
         return jnp.where((fields >= 0)[:, :, None], hit, True).all(axis=1)
 
-    def _disjunct_cluster_masks(self, fields: jax.Array,
-                                allowed: jax.Array) -> jax.Array:
+    def _disjunct_cluster_masks(self, fields: jax.Array, allowed: jax.Array,
+                                bounds: jax.Array | None = None) -> jax.Array:
         """(Q, D, C) DNF tables -> (Q, D, K) bool per-disjunct conjunctive
         cluster-match masks (dead disjuncts all-False) — the pre-union form
         the per-disjunct seed quota needs."""
         pres = self.presence[jnp.maximum(fields, 0)]        # (Q, D, C, K, W)
         hit = ((pres & allowed[..., None, :]) != 0).any(-1)  # (Q, D, C, K)
+        if bounds is not None:
+            lo, hi = bounds[..., 0], bounds[..., 1]         # (Q, D, C)
+            cmin = self.code_min[jnp.maximum(fields, 0)]    # (Q, D, C, K)
+            cmax = self.code_max[jnp.maximum(fields, 0)]
+            overlap = (cmin <= hi[..., None]) & (cmax >= lo[..., None])
+            hit = jnp.where((lo <= hi)[..., None], overlap, hit)
         conj = jnp.where((fields >= 0)[..., None], hit, True).all(axis=2)
         alive = fields[:, :, 0] > DEAD_DISJUNCT             # (Q, D)
         return conj & alive[:, :, None]
@@ -253,7 +318,7 @@ class DeviceAtlas:
         return cnt, rank_csr[:, self.inv_perm]
 
     def select_anchors_batch(
-        self, q_vecs: jax.Array, clause_tables: tuple[jax.Array, jax.Array],
+        self, q_vecs: jax.Array, clause_tables: tuple,
         processed: jax.Array, vectors: jax.Array, passes: jax.Array, *,
         n_seeds: int = 10, c_max: int = 5, member_cap: int = MEMBER_CAP,
         backend: str = "sort", disjunct_quota: int = 2,
@@ -281,7 +346,8 @@ class DeviceAtlas:
         set (displacing tail main seeds; the conjunctive rank-2 path is
         byte-identical to before).
         """
-        fields, allowed = clause_tables
+        fields, allowed = clause_tables[0], clause_tables[1]
+        bounds = clause_tables[2] if len(clause_tables) > 2 else None
         if allowed.shape[-1] != self.presence.shape[-1]:
             raise ValueError(
                 f"clause tables packed for {32 * allowed.shape[-1]} codes "
@@ -294,7 +360,7 @@ class DeviceAtlas:
 
         # one presence expansion per round: the pre-union (Q, D, K) masks
         # feed both the availability union and the disjunct-quota repair
-        dmasks = (self._disjunct_cluster_masks(fields, allowed)
+        dmasks = (self._disjunct_cluster_masks(fields, allowed, bounds)
                   if fields.ndim == 3 else None)
         match = (dmasks.any(axis=1) if dmasks is not None
                  else self.matching_clusters_batch(fields, allowed))

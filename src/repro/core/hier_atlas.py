@@ -14,7 +14,8 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.atlas import AnchorAtlas, _union_over_disjuncts
+from repro.core.atlas import (AnchorAtlas, _spec_keys,
+                              _union_over_disjuncts)
 from repro.core.kmeans import kmeans
 from repro.core.types import Dataset, FilterPredicate
 
@@ -54,7 +55,7 @@ class HierAtlas:
         acc: np.ndarray | None = None
         for f, allowed in clauses:
             idx = self.super_index[f]
-            parts = [idx[v] for v in allowed if v in idx]
+            parts = [idx[v] for v in _spec_keys(allowed, idx)]
             cur = (np.unique(np.concatenate(parts)) if parts
                    else np.empty(0, dtype=np.int32))
             acc = cur if acc is None else np.intersect1d(acc, cur,

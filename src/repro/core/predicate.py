@@ -16,9 +16,13 @@ kernels — property-tested bit-identical in ``tests/test_predicate.py``):
   constraint on that field, **including negated ones** — ``Not`` is the
   complement within the field's populated domain ``[0, vocab_sizes[f])``,
   not a boolean flip. This is what makes ``Not``/``Range`` lowerable to
-  plain value-sets (complement / interval) with no new kernel semantics.
+  complement value-sets (small domains) or symbolic ``Interval`` clauses
+  (large domains) with identical semantics.
 * ``In`` is literal: its values are kept as given (negatives dropped),
   so high-cardinality codes beyond a default domain still match.
+* ``Range`` compiles to a symbolic ``(field, Interval(lo, hi))`` clause —
+  two ints regardless of the field's vocabulary — never a materialized
+  value-set, so clause-table bytes are O(1) in the domain size.
 * ``Range(f, lo, hi)`` is the inclusive interval clipped to the field's
   domain; open ends (``None``) extend to the domain edge.
 
@@ -32,13 +36,30 @@ from their metadata (``max+1`` per field) when the dataset's
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, Sequence
+from typing import Iterable, NamedTuple, Sequence
 
 import numpy as np
 
 # fallback per-field domain for Not/Range when no vocab_sizes is given;
 # matches the kernels' default value-bitmap capacity (kernels.ops.V_CAP)
 DEFAULT_DOMAIN = 256
+
+
+class Interval(NamedTuple):
+    """Symbolic inclusive interval clause value: the row passes iff
+    ``lo <= code <= hi`` (and the code is populated, i.e. >= 0). Appears
+    as the second element of a clause tuple in place of a value tuple, so
+    a ``Range`` over a vocab-10^6 field costs two ints instead of a
+    materialized million-value set. NOTE: a NamedTuple *is* a tuple —
+    every consumer that iterates clause values must check
+    ``isinstance(spec, Interval)`` first."""
+
+    lo: int
+    hi: int
+
+    @property
+    def width(self) -> int:
+        return max(self.hi - self.lo + 1, 0)
 
 # bound on the disjunctive blow-up: And-over-Or distribution is cut off
 # (ValueError) once a (sub)expression needs more conjunctive clause tables
@@ -196,22 +217,31 @@ class DNF:
     def max_clauses(self) -> int:
         return max((len(d) for d in self.disjuncts), default=0)
 
+    @property
+    def has_intervals(self) -> bool:
+        return any(isinstance(spec, Interval)
+                   for d in self.disjuncts for _, spec in d)
+
     def mask(self, metadata: np.ndarray,
              vocab_sizes: Sequence[int] | None = None) -> np.ndarray:
-        """Union over disjuncts of conjunctive isin masks (``vocab_sizes``
-        accepted for interface parity; negation is already lowered)."""
+        """Union over disjuncts of conjunctive clause masks (``vocab_sizes``
+        accepted for interface parity; negation is already lowered).
+        Interval clauses are two comparisons; value-set clauses an isin."""
         del vocab_sizes
         meta = np.asarray(metadata)
         out = np.zeros(meta.shape[0], dtype=bool)
         for clauses in self.disjuncts:
             m = np.ones(meta.shape[0], dtype=bool)
-            for f, vals in clauses:
+            for f, spec in clauses:
                 col = meta[:, f]
                 # col >= 0 guard: unpopulated codes fail every clause even
                 # if a hand-built DNF carries negative values (the device
                 # packers drop them; the oracles must agree)
-                m &= (col >= 0) & np.isin(col,
-                                          np.asarray(vals, dtype=np.int64))
+                if isinstance(spec, Interval):
+                    m &= (col >= 0) & (col >= spec.lo) & (col <= spec.hi)
+                else:
+                    m &= (col >= 0) & np.isin(
+                        col, np.asarray(spec, dtype=np.int64))
             out |= m
         return out
 
@@ -223,8 +253,13 @@ class DNF:
         """Lower a ≤1-disjunct DNF to a plain conjunctive FilterPredicate
         (0 disjuncts become the canonical match-nothing clause), so purely
         conjunctive batches keep the legacy clause-table shape and its
-        compiled programs."""
+        compiled programs. Interval clauses have no FilterPredicate form —
+        callers must check ``has_intervals`` first."""
         from repro.core.types import FilterPredicate
+        if self.has_intervals:
+            raise ValueError(
+                "DNF with interval clauses cannot lower to a value-set "
+                "FilterPredicate; keep the DNF form")
         if self.n_disjuncts == 0:
             return FilterPredicate(((0, ()),))
         if self.n_disjuncts == 1:
@@ -233,26 +268,97 @@ class DNF:
             f"DNF with {self.n_disjuncts} disjuncts is not conjunctive")
 
 
-def _leaf_values(e: FilterExpr, neg: bool,
-                 vocab_sizes: Sequence[int] | None) -> frozenset[int]:
+def _runs(vals: Iterable[int]) -> list[tuple[int, int]]:
+    """Maximal consecutive runs of a sorted-able int collection."""
+    out: list[tuple[int, int]] = []
+    for v in sorted(vals):
+        if out and v == out[-1][1] + 1:
+            out[-1] = (out[-1][0], v)
+        else:
+            out.append((v, v))
+    return out
+
+
+def _complement_intervals(vals: Iterable[int], dom: int) -> list[Interval]:
+    """[0, dom) minus the given values, as a list of gap intervals."""
+    gaps, prev = [], 0
+    for lo, hi in _runs(v for v in vals if 0 <= v < dom):
+        if lo > prev:
+            gaps.append(Interval(prev, lo - 1))
+        prev = hi + 1
+    if prev <= dom - 1:
+        gaps.append(Interval(prev, dom - 1))
+    return gaps
+
+
+def _leaf_specs(e: FilterExpr, neg: bool, vocab_sizes: Sequence[int] | None,
+                v_cap: int | None) -> list[dict]:
+    """Lower one leaf (possibly negated) to a list of single-field
+    conjunct dicts (its disjuncts). Each dict value is a ``frozenset`` of
+    codes or a symbolic ``Interval`` — never a materialized range: the
+    choice is what keeps both the host compile and the device clause
+    tables O(1) in the field's vocabulary size.
+
+    * ``Range`` stays a single clipped interval; its negation is the ≤2
+      complement intervals within the domain.
+    * ``In`` stays a literal value-set unless a value exceeds the device
+      bitmap capacity ``v_cap`` — then it splits into consecutive-run
+      intervals (one disjunct per run).
+    * ``Not(In)`` is the domain complement: a value-set only while the
+      domain fits the bitmap (byte-identical legacy tables for small
+      categorical vocabs), gap intervals beyond that.
+    """
     dom = _domain(e.field, vocab_sizes)
-    if isinstance(e, In):
-        base = frozenset(e.values)
-    elif isinstance(e, Range):
+    small = v_cap if v_cap is not None else DEFAULT_DOMAIN
+    if isinstance(e, Range):
         lo, hi = _range_bounds(e, dom)
-        base = frozenset(range(lo, hi + 1)) if hi >= lo else frozenset()
-    else:
+        if not neg:
+            return [] if hi < lo else [{e.field: Interval(lo, hi)}]
+        if hi < lo:  # empty range: complement is the whole domain
+            return [] if dom <= 0 else [{e.field: Interval(0, dom - 1)}]
+        out = []
+        if lo > 0:
+            out.append({e.field: Interval(0, lo - 1)})
+        if hi < dom - 1:
+            out.append({e.field: Interval(hi + 1, dom - 1)})
+        return out
+    if not isinstance(e, In):
         raise TypeError(f"not a FilterExpr leaf: {e!r}")
-    return frozenset(range(dom)) - base if neg else base
+    base = frozenset(e.values)
+    if not neg:
+        if v_cap is not None and any(v >= v_cap for v in base):
+            return [{e.field: Interval(lo, hi)} for lo, hi in _runs(base)]
+        return [] if not base else [{e.field: base}]
+    if dom <= 0:
+        return []
+    if dom <= small:
+        comp = frozenset(range(dom)) - base
+        return [] if not comp else [{e.field: comp}]
+    return [{e.field: iv} for iv in _complement_intervals(base, dom)]
+
+
+def _isect(a, b):
+    """Intersection of two clause specs (frozenset or Interval). Returns
+    a spec, or None/empty-set when unsatisfiable."""
+    a_iv, b_iv = isinstance(a, Interval), isinstance(b, Interval)
+    if a_iv and b_iv:
+        lo, hi = max(a.lo, b.lo), min(a.hi, b.hi)
+        return None if hi < lo else Interval(lo, hi)
+    if a_iv:
+        return frozenset(v for v in b if a.lo <= v <= a.hi)
+    if b_iv:
+        return frozenset(v for v in a if b.lo <= v <= b.hi)
+    return a & b
 
 
 def _merge_conj(a: dict, b: dict) -> dict | None:
-    """AND of two conjuncts: intersect same-field value sets; ``None`` if
-    any intersection is empty (the combined disjunct is unsatisfiable)."""
+    """AND of two conjuncts: intersect same-field specs (value sets and/or
+    intervals); ``None`` if any intersection is empty (the combined
+    disjunct is unsatisfiable)."""
     out = dict(a)
     for f, vs in b.items():
-        inter = (out[f] & vs) if f in out else vs
-        if not inter:
+        inter = _isect(out[f], vs) if f in out else vs
+        if inter is None or (not isinstance(inter, Interval) and not inter):
             return None
         out[f] = inter
     return out
@@ -269,12 +375,13 @@ def _dedupe(disjuncts: list[dict]) -> list[dict]:
 
 
 def _lower(e: FilterExpr, neg: bool, vocab_sizes: Sequence[int] | None,
-           cap: int) -> list[dict]:
+           cap: int, v_cap: int | None) -> list[dict]:
     if isinstance(e, Not):
-        return _lower(e.child, not neg, vocab_sizes, cap)
+        return _lower(e.child, not neg, vocab_sizes, cap, v_cap)
     if isinstance(e, (And, Or)):
         conj = isinstance(e, And) ^ neg
-        parts = [_lower(c, neg, vocab_sizes, cap) for c in e.children]
+        parts = [_lower(c, neg, vocab_sizes, cap, v_cap)
+                 for c in e.children]
         if conj:
             acc: list[dict] = [{}]
             for p in parts:
@@ -303,17 +410,24 @@ def _lower(e: FilterExpr, neg: bool, vocab_sizes: Sequence[int] | None,
                 f"max_disjuncts={cap}; simplify the predicate or raise "
                 f"the bound")
         return out
-    vals = _leaf_values(e, neg, vocab_sizes)
-    return [] if not vals else [{e.field: vals}]
+    return _leaf_specs(e, neg, vocab_sizes, v_cap)
+
+
+def _norm_spec(spec):
+    return spec if isinstance(spec, Interval) else tuple(sorted(spec))
 
 
 def compile_to_dnf(expr, vocab_sizes: Sequence[int] | None = None, *,
-                   max_disjuncts: int = MAX_DISJUNCTS) -> DNF:
+                   max_disjuncts: int = MAX_DISJUNCTS,
+                   v_cap: int | None = None) -> DNF:
     """Normalize any ``FilterExpr`` (or FilterPredicate / DNF) to a bounded
-    DNF: ``Not``/``Range`` lower to complement/interval value-sets against
-    ``vocab_sizes``, ``And`` distributes over ``Or`` with unsatisfiable
-    disjuncts dropped and duplicates merged, and the disjunct count is
-    capped at ``max_disjuncts`` (ValueError beyond)."""
+    DNF: ``Range`` stays a symbolic interval clause, ``Not`` lowers to the
+    domain complement (value-set for small domains, gap intervals beyond),
+    ``And`` distributes over ``Or`` with unsatisfiable disjuncts dropped
+    and duplicates merged, and the disjunct count is capped at
+    ``max_disjuncts`` (ValueError beyond). ``v_cap`` is the device bitmap
+    capacity: when given, ``In`` values beyond it split into interval-run
+    disjuncts so the result always packs."""
     if isinstance(expr, DNF):
         return expr
     if not isinstance(expr, FilterExpr):
@@ -324,19 +438,36 @@ def compile_to_dnf(expr, vocab_sizes: Sequence[int] | None = None, *,
         # unpopulated), and the device packers skip them too
         return DNF((tuple((f, tuple(v for v in vals if v >= 0))
                           for f, vals in clauses),))
-    disjuncts = _lower(expr, False, vocab_sizes, max_disjuncts)
+    disjuncts = _lower(expr, False, vocab_sizes, max_disjuncts, v_cap)
     return DNF(tuple(
-        tuple(sorted((f, tuple(sorted(vs))) for f, vs in d.items()))
+        tuple(sorted(((f, _norm_spec(vs)) for f, vs in d.items()),
+                     key=lambda c: c[0]))
         for d in disjuncts))
 
 
 def as_dnf(pred, vocab_sizes: Sequence[int] | None = None, *,
-           max_disjuncts: int = MAX_DISJUNCTS) -> DNF:
+           max_disjuncts: int = MAX_DISJUNCTS,
+           v_cap: int | None = None) -> DNF:
     """Uniform entry point for every layer that consumes predicates:
     DNF passes through, FilterPredicate wraps as its single disjunct
     (verbatim — no simplification, so legacy clause tables stay
     byte-identical), FilterExpr compiles."""
-    return compile_to_dnf(pred, vocab_sizes, max_disjuncts=max_disjuncts)
+    return compile_to_dnf(pred, vocab_sizes, max_disjuncts=max_disjuncts,
+                          v_cap=v_cap)
+
+
+def disjunct_selectivity(clauses: Clauses,
+                         vocab_sizes: Sequence[int] | None = None) -> float:
+    """Independence-assumption selectivity estimate of one conjunctive
+    clause list: product over clauses of |spec| / domain. Used to pack
+    rare disjuncts first so the kernel's short-circuit skips the broad
+    tail once a tile's pass words saturate."""
+    s = 1.0
+    for f, spec in clauses:
+        dom = max(_domain(f, vocab_sizes), 1)
+        width = spec.width if isinstance(spec, Interval) else len(spec)
+        s *= min(width / dom, 1.0)
+    return s
 
 
 def derived_vocab_sizes(metadata: np.ndarray) -> tuple[int, ...]:

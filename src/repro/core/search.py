@@ -47,12 +47,26 @@ class FiberIndex:
 
     def vocab_sizes(self) -> tuple[int, ...]:
         """Per-field domains for FilterExpr Not/Range lowering, derived
-        from the metadata once and memoized (it is an index invariant)."""
+        from the metadata once and memoized. NOT an invariant once ingest
+        exists: ``extend_vocab`` must be called when inserts widen a
+        field's domain, or Not/open-ended-Range queries silently miss the
+        newly introduced codes."""
         vs = getattr(self, "_vocab_sizes", None)
         if vs is None:
             vs = derived_vocab_sizes(self.metadata)
             self._vocab_sizes = vs
         return vs
+
+    def extend_vocab(self, sizes) -> tuple[int, ...]:
+        """Widen the memoized per-field domains to cover ``sizes``
+        (elementwise max; extra trailing fields append). Engines call this
+        after every ingest batch so the sequential parity path lowers
+        Not/Range against domains that include inserted codes."""
+        cur = self.vocab_sizes()
+        sizes = tuple(int(s) for s in sizes)
+        merged = tuple(max(a, b) for a, b in zip(cur, sizes))
+        self._vocab_sizes = merged + sizes[len(cur):]
+        return self._vocab_sizes
 
 
 def search(index: FiberIndex, q: np.ndarray,

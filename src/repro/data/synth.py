@@ -17,7 +17,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.predicate import In, Or
+from repro.core.predicate import In, Or, Range
 from repro.core.types import Dataset, FilterPredicate, Query, normalize
 
 
@@ -159,6 +159,76 @@ def make_or_queries(ds: Dataset, code: int, n_queries: int, *,
         src = members[rng.integers(members.size)]
         qv = normalize(ds.vectors[src] + 0.15 * rng.standard_normal(ds.d))
         out.append(Query(vector=qv, predicate=pred, selectivity=sel))
+    return out
+
+
+# large enough that value-set lowering of a window over it would be
+# hopeless (2^20 codes) — range workloads MUST take the interval path
+TS_DOMAIN = 1 << 20
+
+
+def add_timestamp_field(ds: Dataset, *, domain: int = TS_DOMAIN,
+                        seed: int = 31) -> Dataset:
+    """Append a large-vocab ``ts`` field: n distinct codes drawn uniformly
+    from ``[0, domain)`` and dealt out by a random permutation. Because the
+    codes are distinct, a prefix window ``Range(ts, 0, hi)`` has an exactly
+    controllable selectivity (pick ``hi`` as the k-th smallest code), and
+    because ``domain`` is ~10^6 the predicate only compiles through the
+    symbolic interval path — a value-set expansion would need the whole
+    window enumerated. The base dataset's fields are untouched."""
+    rng = np.random.default_rng(seed)
+    codes = np.sort(rng.choice(domain, size=ds.n, replace=False))
+    col = codes[rng.permutation(ds.n)].astype(np.int32)
+    metadata = np.concatenate([ds.metadata, col[:, None]], axis=1)
+    return Dataset(ds.vectors, metadata, ds.field_names + ["ts"],
+                   ds.vocab_sizes + [domain])
+
+
+def add_window_indicator_fields(ds: Dataset, sels, *,
+                                prefix: str = "win") -> Dataset:
+    """Append one binary field per selectivity marking EXACTLY the rows
+    inside ``range_predicate(ds, sel)``'s window. ``In(win<sel>, [1])``
+    through the legacy value-set path is then the matched categorical
+    baseline for the interval row — same mask, same attainable recall —
+    which is what the ``range_sel*`` benchmark rows compare against."""
+    cols, names, vocabs = [], [], []
+    for sel in sels:
+        pred = range_predicate(ds, sel)
+        cols.append(pred.mask(ds.metadata, ds.vocab_sizes)
+                    .astype(np.int32))
+        names.append(f"{prefix}{sel}")
+        vocabs.append(2)
+    metadata = np.concatenate([ds.metadata, np.stack(cols, axis=1)], axis=1)
+    return Dataset(ds.vectors, metadata, ds.field_names + names,
+                   ds.vocab_sizes + vocabs)
+
+
+def range_predicate(ds: Dataset, sel: float) -> Range:
+    """A prefix window over an ``add_timestamp_field`` dataset's ``ts``
+    field selecting (as close as n allows) fraction ``sel`` of the rows."""
+    f = ds.field_names.index("ts")
+    col = np.sort(ds.metadata[:, f])
+    k = max(1, int(round(sel * ds.n)))
+    return Range(f, 0, int(col[k - 1]))
+
+
+def make_range_queries(ds: Dataset, sel: float, n_queries: int, *,
+                       seed: int = 11) -> list[Query]:
+    """Queries near corpus points inside the ``sel`` timestamp window (so
+    recall is attainable), mirroring ``make_or_queries`` for the range
+    benchmark rows."""
+    rng = np.random.default_rng(seed + int(round(sel * 1000)))
+    pred = range_predicate(ds, sel)
+    passes = pred.mask(ds.metadata, ds.vocab_sizes)
+    members = np.nonzero(passes)[0]
+    if members.size == 0:
+        raise ValueError(f"no corpus rows inside the sel={sel} window")
+    real_sel = float(passes.mean())
+    out = []
+    for _ in range(n_queries):
+        src = members[rng.integers(members.size)]
+        qv = normalize(ds.vectors[src] + 0.15 * rng.standard_normal(ds.d))
+        out.append(Query(vector=qv, predicate=pred, selectivity=real_sel))
     return out
 
 

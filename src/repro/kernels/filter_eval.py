@@ -113,8 +113,52 @@ def _dnf_batch_kernel(meta_ref, fields_ref, allowed_ref, ndisj_ref, out_ref,
     out_ref[...] = jnp.sum(bits * weights, axis=1).reshape(1, tn // 32)
 
 
+def _dnf_bounds_batch_kernel(meta_ref, fields_ref, allowed_ref, bounds_ref,
+                             ndisj_ref, out_ref, *, n_disjuncts: int,
+                             n_clauses: int, v_cap: int):
+    """Interval-capable disjunctive program: per clause, dispatch on the
+    bounds sentinel (``lo <= hi`` marks an interval clause) between the
+    two-comparison interval test — no gathers, no vocab-width bitmaps —
+    and the legacy iota-compare value-set membership. Disjuncts arrive
+    packed rarest-first (``pack_query_batch`` orders by estimated
+    selectivity), so the ``lax.cond`` short-circuit skips the broad tail
+    disjuncts entirely once every row of the tile already passes."""
+    meta = meta_ref[...]                       # (Tn, F) int32
+    tn = meta.shape[0]
+    viota = jax.lax.broadcasted_iota(jnp.int32, (tn, v_cap), 1)
+    nd = ndisj_ref[0, 0]
+
+    def eval_disjunct(dd, ok):
+        alive = jnp.int32(dd) < nd
+        ok_d = jnp.ones((tn,), jnp.bool_)
+        for c in range(n_clauses):             # static, small (<= 4 clauses)
+            f = fields_ref[0, dd, c]
+            active = f >= 0
+            col = jax.lax.dynamic_index_in_dim(meta, jnp.maximum(f, 0),
+                                               axis=1, keepdims=False)
+            lo = bounds_ref[0, dd, c, 0]
+            hi = bounds_ref[0, dd, c, 1]
+            hit_tbl = allowed_ref[0, dd, c, :] > 0            # (v_cap,)
+            eq = viota == col[:, None]
+            set_ok = (jnp.any(eq & hit_tbl[None, :], axis=1)
+                      & (col >= 0) & (col < v_cap))
+            iv_ok = (col >= 0) & (col >= lo) & (col <= hi)
+            clause_ok = jnp.where(lo <= hi, iv_ok, set_ok)
+            ok_d = jnp.where(active, ok_d & clause_ok, ok_d)
+        return ok | (ok_d & alive)
+
+    ok = eval_disjunct(0, jnp.zeros((tn,), jnp.bool_))
+    for dd in range(1, n_disjuncts):           # static, small (<= D_cap)
+        ok = jax.lax.cond(jnp.all(ok), lambda o: o,
+                          lambda o, dd=dd: eval_disjunct(dd, o), ok)
+    bits = ok.reshape(tn // 32, 32).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jax.lax.broadcasted_iota(
+        jnp.uint32, (tn // 32, 32), 1))
+    out_ref[...] = jnp.sum(bits * weights, axis=1).reshape(1, tn // 32)
+
+
 @functools.partial(jax.jit, static_argnames=("tn", "interpret"))
-def filter_eval_batch(metadata, fields, allowed, n_disj=None, *,
+def filter_eval_batch(metadata, fields, allowed, n_disj=None, bounds=None, *,
                       tn: int = 1024, interpret: bool = True):
     """Batched corpus sweep: metadata (n, F) i32; fields (Q, C) i32 (-1
     inactive); allowed (Q, C, ceil(v_cap/32)) uint32 value bitmaps (the
@@ -125,6 +169,12 @@ def filter_eval_batch(metadata, fields, allowed, n_disj=None, *,
     live-disjunct counts (derived from the sentinel when omitted); the
     per-query bitmap is the union over live disjuncts of their conjunctive
     bitmaps, still one corpus sweep.
+
+    Interval form: ``bounds`` (Q, D, C, 2) i32 rides along the disjunctive
+    tables; a clause row with ``lo <= hi`` is evaluated as the inclusive
+    interval test instead of bitmap membership (its bitmap row is zero),
+    and disjuncts short-circuit rarest-first. ``bounds=None`` keeps the
+    legacy programs byte-identical.
 
     The packed value bitmaps are expanded to the dense per-value tables the
     iota-compare kernel consumes outside the kernel (tiny: Q*D*C*v_cap
@@ -148,22 +198,43 @@ def filter_eval_batch(metadata, fields, allowed, n_disj=None, *,
         if n_disj is None:
             n_disj = table_n_disj(fields)
         dense = dense.reshape(q_n, D, C, v_cap)
-        out = pl.pallas_call(
-            functools.partial(_dnf_batch_kernel, n_disjuncts=D, n_clauses=C,
-                              v_cap=v_cap),
-            grid=grid,
-            in_specs=[
-                pl.BlockSpec((tn, F), lambda i, q: (i, 0)),
-                pl.BlockSpec((1, D, C), lambda i, q: (q, 0, 0)),
-                pl.BlockSpec((1, D, C, v_cap), lambda i, q: (q, 0, 0, 0)),
-                pl.BlockSpec((1, 1), lambda i, q: (q, 0)),
-            ],
-            out_specs=pl.BlockSpec((1, tn // 32), lambda i, q: (q, i)),
-            out_shape=jax.ShapeDtypeStruct((q_n, (n + n_pad) // 32),
-                                           jnp.uint32),
-            interpret=interpret,
-        )(meta_p, fields, dense,
-          n_disj.astype(jnp.int32).reshape(q_n, 1))
+        if bounds is not None:
+            out = pl.pallas_call(
+                functools.partial(_dnf_bounds_batch_kernel, n_disjuncts=D,
+                                  n_clauses=C, v_cap=v_cap),
+                grid=grid,
+                in_specs=[
+                    pl.BlockSpec((tn, F), lambda i, q: (i, 0)),
+                    pl.BlockSpec((1, D, C), lambda i, q: (q, 0, 0)),
+                    pl.BlockSpec((1, D, C, v_cap),
+                                 lambda i, q: (q, 0, 0, 0)),
+                    pl.BlockSpec((1, D, C, 2), lambda i, q: (q, 0, 0, 0)),
+                    pl.BlockSpec((1, 1), lambda i, q: (q, 0)),
+                ],
+                out_specs=pl.BlockSpec((1, tn // 32), lambda i, q: (q, i)),
+                out_shape=jax.ShapeDtypeStruct((q_n, (n + n_pad) // 32),
+                                               jnp.uint32),
+                interpret=interpret,
+            )(meta_p, fields, dense, bounds.astype(jnp.int32),
+              n_disj.astype(jnp.int32).reshape(q_n, 1))
+        else:
+            out = pl.pallas_call(
+                functools.partial(_dnf_batch_kernel, n_disjuncts=D,
+                                  n_clauses=C, v_cap=v_cap),
+                grid=grid,
+                in_specs=[
+                    pl.BlockSpec((tn, F), lambda i, q: (i, 0)),
+                    pl.BlockSpec((1, D, C), lambda i, q: (q, 0, 0)),
+                    pl.BlockSpec((1, D, C, v_cap),
+                                 lambda i, q: (q, 0, 0, 0)),
+                    pl.BlockSpec((1, 1), lambda i, q: (q, 0)),
+                ],
+                out_specs=pl.BlockSpec((1, tn // 32), lambda i, q: (q, i)),
+                out_shape=jax.ShapeDtypeStruct((q_n, (n + n_pad) // 32),
+                                               jnp.uint32),
+                interpret=interpret,
+            )(meta_p, fields, dense,
+              n_disj.astype(jnp.int32).reshape(q_n, 1))
     else:
         C = fields.shape[1]
         dense = dense.reshape(q_n, C, v_cap)

@@ -47,10 +47,10 @@ def filter_eval(metadata, fields, allowed, *, tn: int = 1024):
                         interpret=_interpret())
 
 
-def filter_eval_batch(metadata, fields, allowed, n_disj=None, *,
+def filter_eval_batch(metadata, fields, allowed, n_disj=None, bounds=None, *,
                       tn: int = 1024):
-    return _filter_eval_batch(metadata, fields, allowed, n_disj, tn=tn,
-                              interpret=_interpret())
+    return _filter_eval_batch(metadata, fields, allowed, n_disj, bounds,
+                              tn=tn, interpret=_interpret())
 
 
 def predicate_tables(pred, n_fields: int,

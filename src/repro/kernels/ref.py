@@ -102,9 +102,12 @@ def filter_eval(metadata: jax.Array, fields: jax.Array, allowed: jax.Array):
     return (bits * weights).sum(axis=1).astype(jnp.uint32)
 
 
-def _conj_ok(metadata: jax.Array, fields: jax.Array, allowed: jax.Array):
+def _conj_ok(metadata: jax.Array, fields: jax.Array, allowed: jax.Array,
+             bounds: jax.Array | None = None):
     """(Q, n) bool conjunction for one clause-table slice: fields (Q, C)
-    i32, allowed (Q, C, Wv) uint32 value bitmaps."""
+    i32, allowed (Q, C, Wv) uint32 value bitmaps, optional bounds (Q, C, 2)
+    i32 interval rows (a clause with lo <= hi is the two-comparison
+    interval test; its bitmap row is zero)."""
     n = metadata.shape[0]
     q_n, n_clauses = fields.shape
     v_cap = allowed.shape[-1] * 32
@@ -117,12 +120,18 @@ def _conj_ok(metadata: jax.Array, fields: jax.Array, allowed: jax.Array):
                                     (safe >> 5).astype(jnp.int32), axis=1)
         bit = ((words >> (safe & 31).astype(jnp.uint32)) & 1).astype(bool)
         clause_ok = bit & (vals >= 0) & (vals < v_cap)
+        if bounds is not None:
+            lo = bounds[:, c, 0][:, None]                       # (Q, 1)
+            hi = bounds[:, c, 1][:, None]
+            iv_ok = (vals >= 0) & (vals >= lo) & (vals <= hi)
+            clause_ok = jnp.where(lo <= hi, iv_ok, clause_ok)
         ok = jnp.where((f >= 0)[:, None], ok & clause_ok, ok)
     return ok
 
 
 def filter_eval_batch(metadata: jax.Array, fields: jax.Array,
-                      allowed: jax.Array, n_disj: jax.Array | None = None):
+                      allowed: jax.Array, n_disj: jax.Array | None = None,
+                      bounds: jax.Array | None = None):
     """metadata (n, F) i32; fields (Q, C) i32 (-1 = inactive clause);
     allowed (Q, C, ceil(v_cap/32)) uint32 value bitmaps (the
     ``pack_predicates`` clause-table format). Returns (Q, ceil(n/32))
@@ -131,7 +140,8 @@ def filter_eval_batch(metadata: jax.Array, fields: jax.Array,
     Disjunctive form (the ``pack_dnf`` tables): fields (Q, D, C) i32
     (-2 = dead-disjunct padding), allowed (Q, D, C, Wv), n_disj (Q,) i32
     live-disjunct counts (derived from the sentinel when omitted); the
-    bitmap is the union over live disjuncts of conjunctive bitmaps."""
+    bitmap is the union over live disjuncts of conjunctive bitmaps.
+    Optional bounds (Q, D, C, 2) i32 marks interval clauses (lo <= hi)."""
     n = metadata.shape[0]
     q_n = fields.shape[0]
     if fields.ndim == 3:
@@ -141,7 +151,8 @@ def filter_eval_batch(metadata: jax.Array, fields: jax.Array,
             n_disj = table_n_disj(fields)
         ok = jnp.zeros((q_n, n), bool)
         for d in range(D):
-            ok_d = _conj_ok(metadata, fields[:, d, :], allowed[:, d, :, :])
+            ok_d = _conj_ok(metadata, fields[:, d, :], allowed[:, d, :, :],
+                            None if bounds is None else bounds[:, d, :, :])
             ok = ok | (ok_d & (d < n_disj)[:, None])
     else:
         ok = _conj_ok(metadata, fields, allowed)

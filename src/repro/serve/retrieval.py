@@ -14,7 +14,8 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core.atlas import AnchorAtlas
-from repro.core.batched.engine import BatchedEngine, BatchedParams
+from repro.core.batched.engine import (BatchedEngine, BatchedParams,
+                                       _compile_query_dnf)
 from repro.core.batched.sharded import ShardedEngine, build_sharded_index
 from repro.core.graph import build_alpha_knn
 from repro.core.predicate import FilterExpr
@@ -163,7 +164,14 @@ class RetrievalService:
         — with inert dummy queries (zero vector, ``FilterExpr.never()``:
         they never seed, walk, or affect the loop); results are sliced back
         to the real queries. An empty batch returns ``([], {})`` without
-        touching the engine. Returns (list of id arrays, stats dict)."""
+        touching the engine. Returns (list of id arrays, stats dict).
+
+        Per-query compile failures (e.g. an expression whose DNF exceeds
+        MAX_DISJUNCTS) do NOT kill the batch: the offending query is
+        replaced with an inert ``never()`` (empty result) and the error
+        message is recorded in ``stats["errors"]`` at that query's slot
+        (None for queries that compiled; the key is present only when at
+        least one query failed)."""
         if len(vectors) != len(predicates):
             raise ValueError(
                 f"query_batch got {len(vectors)} vectors but "
@@ -172,18 +180,31 @@ class RetrievalService:
         q_real = len(predicates)
         if q_real == 0:
             return [], {}
+        eng = (self.sharded_engine() if self._mesh_shards() > 1
+               else self.engine())
+        v_cap = eng.v_cap if hasattr(eng, "v_cap") else eng.datlas.v_cap
+        errors: list[str | None] = [None] * q_real
+        checked = []
+        for i, p in enumerate(predicates):
+            try:
+                _compile_query_dnf(p, eng.vocab_sizes, v_cap)
+                checked.append(p)
+            except ValueError as e:
+                errors[i] = str(e)
+                checked.append(FilterExpr.never())
         queries = [Query(vector=v, predicate=p)
-                   for v, p in zip(normalize(vectors), predicates)]
+                   for v, p in zip(normalize(vectors), checked)]
         if bucket:
             target = max(MIN_BUCKET, 1 << (q_real - 1).bit_length())
             if target > q_real:
                 dummy = Query(vector=np.zeros_like(queries[0].vector),
                               predicate=FilterExpr.never())
                 queries = queries + [dummy] * (target - q_real)
-        eng = (self.sharded_engine() if self._mesh_shards() > 1
-               else self.engine())
         ids, stats = eng.search(queries)
-        return ids[:q_real], {k: v[:q_real] for k, v in stats.items()}
+        stats = {k: v[:q_real] for k, v in stats.items()}
+        if any(e is not None for e in errors):
+            stats["errors"] = errors
+        return ids[:q_real], stats
 
     def ingest(self, vectors: np.ndarray,
                metadata: np.ndarray) -> np.ndarray:

@@ -38,6 +38,11 @@ class _Strategies:
         return _Strategy(gen)
 
     @staticmethod
+    def sampled_from(values) -> _Strategy:
+        vals = list(values)
+        return _Strategy(lambda rng: vals[int(rng.integers(len(vals)))])
+
+    @staticmethod
     def permutations(values) -> _Strategy:
         vals = list(values)
         return _Strategy(

@@ -67,9 +67,10 @@ def test_pass_bitmaps_match_tree_oracle_bitexact(or_sweep, or_engine):
     """The engine's device-evaluated DNF pass bitmaps == packed expression-
     tree masks, bit for bit, across the whole disjunctive sweep."""
     ds, _, queries = or_sweep
-    _, fields, allowed = or_engine._pack_queries(queries)
+    _, fields, allowed, bounds = or_engine._pack_queries(queries)
     assert fields.ndim == 3 and fields.shape[1] == 2  # D buckets to 2
-    got = np.asarray(or_engine._passes(or_engine.metadata, fields, allowed))
+    got = np.asarray(or_engine._passes(or_engine.metadata, fields, allowed,
+                                       bounds))
     want = np.asarray(pack_bits(jnp.asarray(np.stack(
         [q.predicate.mask(ds.metadata, ds.vocab_sizes) for q in queries]))))
     np.testing.assert_array_equal(got, want)
@@ -128,8 +129,8 @@ def test_conjunctive_lane_unchanged_in_mixed_batch(or_sweep, or_engine):
     mixed_ids, _ = or_engine.search([conj] + queries[:3])
     np.testing.assert_array_equal(np.asarray(solo_ids[0]),
                                   np.asarray(mixed_ids[0]))
-    _, f_solo, _ = or_engine._pack_queries([conj])
-    assert f_solo.ndim == 2  # pure-conjunctive traffic keeps legacy tables
+    _, f_solo, _, b_solo = or_engine._pack_queries([conj])
+    assert f_solo.ndim == 2 and b_solo is None  # legacy tables kept
 
 
 def test_hier_atlas_sequential_search_with_expressions(or_sweep):
@@ -389,7 +390,7 @@ def test_disjunct_quota_rescues_starved_disjunct():
     assert float(np.mean(meta[:, 1] == 1)) == pytest.approx(0.001)
     datlas = DeviceAtlas.from_atlas(atlas)
     dnf = as_dnf(pred, [2, 2])
-    f_np, a_np, _ = pack_dnf([dnf], v_cap=datlas.v_cap)
+    f_np, a_np, _, _ = pack_dnf([dnf], v_cap=datlas.v_cap)
     q = np.eye(vecs.shape[1], dtype=np.float32)[0]
     passes = jnp.asarray(pred.mask(meta, [2, 2])[None])
     proc = jnp.zeros((1, 3), bool)

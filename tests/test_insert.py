@@ -462,3 +462,46 @@ def test_serve_ingest_and_staleness():
                                   params=SearchParams(k=5))
     with pytest.raises(ValueError, match="capacity"):
         svc2.ingest(ds.vectors[260:280], ds.metadata[260:280])
+
+
+# -- satellite (ISSUE 6): ingest must widen the memoized domains -------------
+
+def test_not_sees_brand_new_code_after_insert():
+    """``FiberIndex.vocab_sizes()`` is memoized at build time; an insert
+    that introduces a brand-new code must extend both the engine's and the
+    index's per-field domains, or ``Not`` / open-ended ``Range`` queries
+    keep lowering against the stale domain and silently exclude every
+    newly inserted row."""
+    from repro.core.graph import build_alpha_knn
+    from repro.core.predicate import In, Not, Range
+    from repro.core.types import normalize
+
+    ds = _tiny_ds(n=260)
+    base_n = 200
+    d0 = Dataset(ds.vectors[:base_n], ds.metadata[:base_n],
+                 ds.field_names, list(ds.vocab_sizes))
+    graph = build_alpha_knn(d0.vectors, k=GRAPH["graph_k"],
+                            r_max=GRAPH["r_max"])
+    atlas = AnchorAtlas.build(d0, seed=0)
+    index = FiberIndex(d0.vectors, d0.metadata, graph, atlas)
+    # engine derives (and the index memoizes) domains from the base rows
+    eng = BatchedEngine(index, PARAMS, capacity=260,
+                        graph_k=GRAPH["graph_k"])
+    new_code = int(ds.metadata[:base_n, 0].max()) + 1
+    assert eng.vocab_sizes[0] == new_code  # stale domain excludes it
+    rng = np.random.default_rng(9)
+    n_new = 40
+    new_v = normalize(rng.standard_normal((n_new, ds.d))
+                      ).astype(np.float32)
+    new_m = np.zeros((n_new, ds.metadata.shape[1]), np.int32)
+    new_m[:, 0] = new_code
+    gids = eng.insert_batch(new_v, new_m)
+    assert eng.vocab_sizes[0] == new_code + 1
+    assert index.vocab_sizes()[0] == new_code + 1
+    new_ids = set(int(g) for g in gids)
+    for pred in (Not(In(0, [0])), Range(0, new_code - 1, None)):
+        ids, _ = eng.search([Query(vector=new_v[0], predicate=pred)])
+        row = np.asarray(ids[0])
+        assert row.size > 0
+        assert new_ids & set(row.tolist()), (
+            f"{pred} missed every inserted new-code row: stale domain")

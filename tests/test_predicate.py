@@ -11,8 +11,8 @@ except ImportError:  # container without hypothesis: deterministic shim
 
 from repro.core.device_atlas import pack_dnf, table_n_disj
 from repro.core.predicate import (DNF, MAX_DISJUNCTS, And, FilterExpr, In,
-                                  Not, Or, Range, as_dnf, compile_to_dnf,
-                                  derived_vocab_sizes)
+                                  Interval, Not, Or, Range, as_dnf,
+                                  compile_to_dnf, derived_vocab_sizes)
 from repro.core.types import FilterPredicate
 
 F = 4
@@ -87,7 +87,8 @@ def test_pack_dnf_tables_roundtrip(me):
         dnf = compile_to_dnf(expr, VOCAB)
     except ValueError:
         return
-    fields, allowed, n_disj = pack_dnf([dnf, DNF(()), DNF(((),))], v_cap=32)
+    fields, allowed, _, n_disj = pack_dnf([dnf, DNF(()), DNF(((),))],
+                                          v_cap=32)
     assert fields.shape[:2] == allowed.shape[:2]
     np.testing.assert_array_equal(n_disj, [dnf.n_disjuncts, 0, 1])
     np.testing.assert_array_equal(np.asarray(table_n_disj(
@@ -126,16 +127,56 @@ def test_not_is_domain_complement_not_boolean_flip():
 
 
 def test_range_lowering_and_clipping():
+    """Range lowers to ONE symbolic interval clause — never a value-set
+    enumeration — clipped to the domain. (Interval subclasses tuple, so the
+    isinstance checks are load-bearing: (2, 4) would compare equal.)"""
     d = compile_to_dnf(Range(0, 2, 4), [8])
-    assert d.disjuncts == (((0, (2, 3, 4)),),)
+    assert d.disjuncts == (((0, Interval(2, 4)),),)
+    assert isinstance(d.disjuncts[0][0][1], Interval)
     assert compile_to_dnf(Range(0, None, 1), [8]).disjuncts == \
-        (((0, (0, 1)),),)
+        (((0, Interval(0, 1)),),)
     assert compile_to_dnf(Range(0, 6, None), [8]).disjuncts == \
-        (((0, (6, 7)),),)
+        (((0, Interval(6, 7)),),)
     # hi beyond the domain clips; an empty interval is never
     assert compile_to_dnf(Range(0, 6, 99), [8]).disjuncts == \
-        (((0, (6, 7)),),)
+        (((0, Interval(6, 7)),),)
     assert compile_to_dnf(Range(0, 5, 2), [8]).n_disjuncts == 0
+    # mask semantics are unchanged from the value-set days
+    meta = np.asarray([[-1], [1], [2], [4], [5]], np.int32)
+    np.testing.assert_array_equal(
+        compile_to_dnf(Range(0, 2, 4), [8]).mask(meta),
+        [False, False, True, True, False])
+
+
+def test_range_is_vocab_independent():
+    """The tentpole bugfix: a window over a 10^6-code vocabulary compiles
+    to the same single interval clause — O(1) in the vocab — instead of
+    enumerating ~10^5 values, and Not(Range) to its ≤2 complement
+    intervals."""
+    dom = 1_000_000
+    d = compile_to_dnf(Range(0, 100_000, 600_000), [dom])
+    assert d.disjuncts == (((0, Interval(100_000, 600_000)),),)
+    nd = compile_to_dnf(Not(Range(0, 100_000, 600_000)), [dom])
+    assert sorted(nd.disjuncts) == [((0, Interval(0, 99_999)),),
+                                    ((0, Interval(600_001, dom - 1)),)]
+    # complement at a domain edge drops the empty side
+    edge = compile_to_dnf(Not(Range(0, 0, 10)), [dom])
+    assert edge.disjuncts == (((0, Interval(11, dom - 1)),),)
+    # same-field conjunction intersects symbolically
+    both = compile_to_dnf(And(Range(0, 10, 500_000), Range(0, 400_000, None)),
+                          [dom])
+    assert both.disjuncts == (((0, Interval(400_000, 500_000)),),)
+
+
+def test_large_in_lowers_to_run_intervals_under_v_cap():
+    """With a v_cap, In values at/above the cap can't live in a bitmap row:
+    they lower to maximal consecutive-run intervals instead of raising."""
+    d = compile_to_dnf(In(0, [300, 301, 302, 400]), [1000], v_cap=256)
+    assert sorted(d.disjuncts) == [((0, Interval(300, 302)),),
+                                   ((0, Interval(400, 400)),)]
+    # below the cap the value-set form is preserved byte-identically
+    small = compile_to_dnf(In(0, [3, 5]), [1000], v_cap=256)
+    assert small.disjuncts == (((0, (3, 5)),),)
 
 
 def test_disjunct_bound_raises():

@@ -131,8 +131,8 @@ def test_query_batch_wide_clause_widths_share_program():
                      .astype(np.float32), predicate=pred)
 
     q5, q7 = wide_query(5), wide_query(7)
-    _, f5, a5 = eng._pack_queries([q5])
-    _, f7, a7 = eng._pack_queries([q7])
+    _, f5, a5, _ = eng._pack_queries([q5])
+    _, f7, a7, _ = eng._pack_queries([q7])
     assert f5.shape == f7.shape == (1, 8)
     assert a5.shape == a7.shape
     eng.search([q5])
@@ -174,3 +174,49 @@ def test_encoded_retriever(tiny_model):
         ids = np.asarray(ids)
         if ids.size:
             assert passes[ids].all()
+
+
+def test_query_batch_isolates_bad_query():
+    """One query whose expression blows the MAX_DISJUNCTS bound must not
+    kill the batch (ISSUE 6 satellite): it gets an empty result and a
+    per-query error entry in stats, while its batch-mates — categorical
+    and interval Range alike — answer normally."""
+    from repro.core.predicate import And, In, Or, Range
+    from repro.core.types import Dataset, normalize
+
+    rng = np.random.default_rng(11)
+    n, d = 600, 16
+    vecs = normalize(rng.standard_normal((n, d)))
+    meta = np.empty((n, 5), np.int32)
+    meta[:, :4] = rng.integers(0, 5, (n, 4))
+    meta[:, 4] = rng.integers(0, 1 << 20, n)  # big-vocab timestamp field
+    ds = Dataset(vecs, meta, ["a", "b", "c", "e", "ts"],
+                 [5, 5, 5, 5, 1 << 20])
+    svc = RetrievalService.build(ds, graph_k=8, r_max=24,
+                                 params=SearchParams(k=5, max_hops=40))
+    good_cat = In(0, [1]) | In(1, [2])
+    good_rng = Range(4, 0, 1 << 19)
+    # 2^4 = 16 distinct disjuncts (distinct fields, nothing merges)
+    bad = And(*[Or(In(f, [0]), In(f, [1])) for f in range(4)])
+    with pytest.raises(ValueError, match="max_disjuncts"):
+        # sanity: alone, the bad query is a loud compile error
+        svc.engine().search([_q(vecs[0], bad)])
+    ids, stats = svc.query_batch(
+        rng.standard_normal((3, d)), [good_cat, bad, good_rng])
+    assert len(ids) == 3
+    assert np.asarray(ids[1]).size == 0          # bad query: empty result
+    assert stats["errors"][0] is None and stats["errors"][2] is None
+    assert "max_disjuncts" in stats["errors"][1]
+    for pred, row in ((good_cat, ids[0]), (good_rng, ids[2])):
+        row = np.asarray(row)
+        assert row.size > 0
+        assert pred.mask(meta, ds.vocab_sizes)[row].all()
+    # an all-good batch carries no errors key at all
+    _, stats_ok = svc.query_batch(rng.standard_normal((2, d)),
+                                  [good_cat, good_rng])
+    assert "errors" not in stats_ok
+
+
+def _q(vec, pred):
+    from repro.core.types import Query, normalize
+    return Query(vector=normalize(vec), predicate=pred)
