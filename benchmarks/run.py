@@ -139,8 +139,76 @@ def parity_gate() -> None:
     print("[parity] all kernels match their oracles")
 
 
+_SMOKE_CRASH_SCRIPT = """
+import os, sys
+import numpy as np
+from repro.core.search import SearchParams
+from repro.core.types import Dataset
+from repro.data.synth import make_selectivity_dataset
+from repro.serve.retrieval import RetrievalService
+root = sys.argv[1]
+ds = make_selectivity_dataset((0.5, 0.1, 0.02), n=420, d=16,
+                              n_components=6, seed=7)
+base = Dataset(ds.vectors[:360], ds.metadata[:360], ds.field_names,
+               ds.vocab_sizes)
+svc = RetrievalService.build(base, graph_k=8, r_max=24,
+                             params=SearchParams(k=5, max_hops=40),
+                             capacity=420)
+svc.enable_durability(root)
+svc.ingest(ds.vectors[360:390], ds.metadata[360:390])
+os.environ["FNS_FAULT"] = "ingest.post-slab-write"  # SIGKILL at the hook
+svc.ingest(ds.vectors[390:420], ds.metadata[390:420])
+print("SURVIVED", flush=True)
+sys.exit(3)
+"""
+
+
+def durability_smoke() -> None:
+    """Crash-recovery smoke (DESIGN.md §10): a subprocess SIGKILLs itself
+    at the ``ingest.post-slab-write`` fault hook; this process recovers
+    from the surviving snapshot + journal, re-runs the kernel/oracle
+    parity gate, and checks filtered search on the recovered index."""
+    import subprocess
+    import tempfile
+
+    import numpy as np
+
+    from repro.data.ground_truth import attach_ground_truth, recall_at_k
+    from repro.data.synth import (make_selectivity_dataset,
+                                  make_selectivity_queries)
+    from repro.serve.retrieval import RetrievalService
+
+    t0 = time.time()
+    root = tempfile.mkdtemp(prefix="fns_smoke_crash_")
+    proc = subprocess.run([sys.executable, "-c", _SMOKE_CRASH_SCRIPT, root],
+                          capture_output=True, text=True, timeout=300)
+    assert proc.returncode == -9, (
+        f"crash script should die by SIGKILL, got rc={proc.returncode}\n"
+        f"{proc.stdout}\n{proc.stderr}")
+    assert "SURVIVED" not in proc.stdout
+    svc = RetrievalService.recover(root)
+    rows = svc.staleness()["corpus_rows"]
+    # both ingests were journaled before the kill: nothing may be lost
+    assert rows == 420, svc.staleness()
+    parity_gate()  # the kernels still match their oracles post-recovery
+    ds = make_selectivity_dataset((0.5, 0.1, 0.02), n=420, d=16,
+                                  n_components=6, seed=7)
+    qs = make_selectivity_queries(ds, 1, 4)
+    attach_ground_truth(ds, qs, k=5)
+    ids, _ = svc.query_batch(np.stack([q.vector for q in qs]),
+                             [q.predicate for q in qs])
+    rec = float(np.mean([recall_at_k(np.asarray(i), q.gt_ids)
+                         for i, q in zip(ids, qs)]))
+    assert rec >= 0.5, f"recovered-index recall {rec:.3f} is broken"
+    _csv("durability/smoke_recover", (time.time() - t0) * 1e6,
+         f"recall={rec:.3f} rows={rows}")
+    print(f"[durability smoke {time.time()-t0:.0f}s] "
+          f"SIGKILL -> recover -> parity OK (recall={rec:.3f})")
+
+
 def smoke() -> None:
-    """CI smoke: parity gate + tiny end-to-end search bench (2 queries)."""
+    """CI smoke: parity gate + tiny end-to-end search bench (2 queries) +
+    a SIGKILL/recover round trip on a durable service."""
     from benchmarks.search_bench import main as search_main
 
     parity_gate()
@@ -172,7 +240,16 @@ def smoke() -> None:
     assert 0.0 <= pi["recall"] <= 1.0
     _csv("search/smoke_insert", 1e6 / ins["rows_per_s"],
          f"post_recall={pi['recall']:.3f}")
+    # durability rows: snapshot/restore/recover each completed and the
+    # recovered index still answers in one fused dispatch
+    pr = next(v for k, v in res.items() if k.startswith("post_recover/"))
+    assert pr["dispatches_per_batch"] == 1, pr
+    assert 0.0 <= pr["recall"] <= 1.0
+    _csv("search/smoke_recover",
+         res["durability/recover"]["ms"] * 1e3,
+         f"post_recall={pr['recall']:.3f}")
     print(f"[smoke search bench {time.time()-t0:.0f}s] OK")
+    durability_smoke()
 
 
 def main() -> None:
@@ -180,8 +257,9 @@ def main() -> None:
     from benchmarks.kernel_bench import (anchor_select_bench, engine_bench,
                                          kernel_microbench)
     from benchmarks.search_bench import OUT_PATH as SEARCH_OUT
-    from benchmarks.search_bench import (insert_bench, or_search_bench,
-                                         search_bench, write_baseline)
+    from benchmarks.search_bench import (durability_bench, insert_bench,
+                                         or_search_bench, search_bench,
+                                         write_baseline)
 
     results: dict = {}
     t_all = time.time()
@@ -275,6 +353,7 @@ def main() -> None:
     results["search"] = search_bench()
     results["search"].update(or_search_bench())  # disjunctive or2 rows
     results["search"].update(insert_bench())     # dynamic-insert rows
+    results["search"].update(durability_bench())  # snapshot/journal rows
     write_baseline(results["search"])
     print("\n== Fused single-dispatch search (Q x selectivity) ==")
     for name, r in results["search"].items():
@@ -286,6 +365,16 @@ def main() -> None:
                   f"repairs={r['reverse_edge_repairs']}")
             _csv(f"search/{name}", 1e6 / r["rows_per_s"],
                  f"rows_per_s={r['rows_per_s']:.0f}")
+            continue
+        if name.startswith("durability/"):
+            kv = " ".join(f"{k}={v:.1f}" if isinstance(v, float)
+                          else f"{k}={v}" for k, v in r.items())
+            print(f"{name:28s} {kv}")
+            if "ms" in r:
+                _csv(name, r["ms"] * 1e3, "wall_ms_x1000")
+            else:
+                _csv(name, 1e6 / r["rows_per_s"],
+                     f"rows_per_s={r['rows_per_s']:.0f}")
             continue
         print(f"{name:14s} qps={r['qps']:8.1f} p50={r['p50_ms']:7.1f}ms "
               f"p99={r['p99_ms']:7.1f}ms recall={r['recall']:.3f} "

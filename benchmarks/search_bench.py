@@ -332,6 +332,97 @@ def insert_bench(batch_sizes=(64, 256, 1024), *, n: int = 8000, d: int = 64,
     return out
 
 
+def durability_bench(*, n: int = 8000, d: int = 64, k: int = 10,
+                     reps: int = 20, graph_k: int = 16, seed: int = 7,
+                     chunk: int = 250, n_chunks: int = 4,
+                     q_post: int = 64) -> dict:
+    """Crash-consistency rows (DESIGN.md §10): the ``insert_bench`` corpus
+    grown through ``serve.ingest`` with a durability root attached —
+
+    * ``durability/journal_append``: rows/sec of the CRC-framed, fsynced
+      write-ahead append (the tax every durable ingest pays up front);
+    * ``durability/snapshot``: wall-ms + on-disk MB of a full engine-state
+      snapshot through the atomic checkpoint format;
+    * ``durability/restore``: wall-ms to reconstruct a serving engine from
+      that snapshot alone (zero graph/atlas rebuild — this number is the
+      point of the whole design: restore cost ~ deserialize, not rebuild);
+    * ``durability/recover``: restore + journal-suffix replay through the
+      normal insert path, with the replay rate derived from the delta;
+    * ``post_recover/q{q_post}/sel0.1``: search QPS + recall on the
+      recovered index, next to the ``post_insert`` row it must match.
+    """
+    import shutil
+    import tempfile
+
+    from repro.core.search import SearchParams
+    from repro.core.types import Dataset
+    from repro.serve.retrieval import RetrievalService
+
+    ds = make_selectivity_dataset(SELECTIVITIES, n=n, d=d, n_components=24,
+                                  seed=seed)
+    grown = chunk * n_chunks * 2
+    base_n = n - grown
+    if base_n <= 0:
+        raise ValueError(f"durability chunks ({grown}) exceed corpus {n}")
+    base = Dataset(ds.vectors[:base_n], ds.metadata[:base_n],
+                   ds.field_names, ds.vocab_sizes)
+    svc = RetrievalService.build(base, graph_k=graph_k, r_max=3 * graph_k,
+                                 params=SearchParams(k=k), capacity=n)
+    root = tempfile.mkdtemp(prefix="fns_durability_bench_")
+    out: dict = {}
+    try:
+        svc.enable_durability(root, snapshot_now=False)
+        # journaled ingest: the append rate here includes the WAL fsync
+        t0 = time.time()
+        written = base_n
+        for _ in range(n_chunks):
+            svc.ingest(ds.vectors[written:written + chunk],
+                       ds.metadata[written:written + chunk])
+            written += chunk
+        dt = time.time() - t0
+        out["durability/journal_append"] = {
+            "rows_per_s": n_chunks * chunk / dt,
+            "journal_bytes": os.path.getsize(os.path.join(root,
+                                                          "journal.bin"))}
+        t0 = time.time()
+        svc.snapshot()
+        snap_s = time.time() - t0
+        snap_bytes = sum(
+            os.path.getsize(os.path.join(dirpath, f))
+            for dirpath, _, files in os.walk(os.path.join(root, "snapshots"))
+            for f in files)
+        out["durability/snapshot"] = {"ms": snap_s * 1e3,
+                                      "mb": snap_bytes / 2**20,
+                                      "corpus_rows": written}
+        # the journal suffix recover() will replay through the insert path
+        for _ in range(n_chunks):
+            svc.ingest(ds.vectors[written:written + chunk],
+                       ds.metadata[written:written + chunk])
+            written += chunk
+        t0 = time.time()
+        RetrievalService.restore(root)
+        restore_s = time.time() - t0
+        out["durability/restore"] = {"ms": restore_s * 1e3,
+                                     "corpus_rows": written - chunk * n_chunks}
+        t0 = time.time()
+        svc2 = RetrievalService.recover(root)
+        recover_s = time.time() - t0
+        replay_s = max(recover_s - restore_s, 1e-9)
+        out["durability/recover"] = {
+            "ms": recover_s * 1e3,
+            "replayed_rows": n_chunks * chunk,
+            "replay_rows_per_s": n_chunks * chunk / replay_s}
+        assert svc2.staleness()["corpus_rows"] == written, (
+            svc2.staleness(), written)
+        qs = make_selectivity_queries(ds, 1, q_post)
+        attach_ground_truth(ds, qs, k=k)
+        row = measure_batch(svc2._live_engine(), qs, reps)
+        out[f"post_recover/q{q_post}/sel0.1"] = row
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return out
+
+
 def write_baseline(results: dict, path: str = OUT_PATH) -> None:
     parent = os.path.dirname(path)
     if parent:
@@ -363,12 +454,18 @@ def main(smoke: bool = False) -> dict:
         # then search the grown index
         results.update(insert_bench(batch_sizes=(8,), n=600, d=16, k=5,
                                     reps=1, graph_k=8, q_post=2))
+        # and the durability path: journaled ingest -> snapshot ->
+        # restore/recover -> search the recovered index
+        results.update(durability_bench(n=600, d=16, k=5, reps=1,
+                                        graph_k=8, chunk=8, n_chunks=2,
+                                        q_post=2))
     else:
         results = search_bench()
         results.update(sharded_search_bench())
         results.update(or_search_bench())
         results.update(range_search_bench())
         results.update(insert_bench())
+        results.update(durability_bench())
         write_baseline(results)
     return results
 
@@ -383,6 +480,11 @@ if __name__ == "__main__":
             print(f"{name:14s} rows/s={r['rows_per_s']:8.1f} "
                   f"batch={r['batch_ms']:7.1f}ms "
                   f"repairs={r['reverse_edge_repairs']}")
+            continue
+        if name.startswith("durability/"):
+            kv = " ".join(f"{k}={v:.1f}" if isinstance(v, float)
+                          else f"{k}={v}" for k, v in r.items())
+            print(f"{name:28s} {kv}")
             continue
         mask_b = r.get("mask_state_bytes",
                        r.get("mask_state_bytes_per_shard", 0))

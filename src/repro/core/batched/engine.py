@@ -508,17 +508,61 @@ class BatchedEngine:
             self._state = InsertState(shards=[slab], v_cap=v_cap,
                                       graph_k=graph_k, alpha=alpha,
                                       seed=0, next_gid=n)
-            self.datlas = emit_device_atlas(slab, v_cap)
-            self.vectors = jnp.asarray(slab.vectors)
-            self.adjacency = jnp.asarray(slab.adjacency)
-            self.metadata = jnp.asarray(slab.metadata)
-            self._valid_bm = pack_bits(jnp.asarray(slab.valid))
+            self._refresh_from_slab(v_cap)
         # per-field domains for Not/Range lowering in FilterExpr queries;
         # derived from observed codes when the dataset's declaration isn't
         # handed in (identical masks for any domain covering the corpus)
         self.vocab_sizes = (tuple(int(v) for v in vocab_sizes)
                             if vocab_sizes is not None
                             else index.vocab_sizes())
+        self._init_programs(seed_backend)
+
+    @classmethod
+    def from_state(cls, state, params: BatchedParams = BatchedParams(),
+                   seed_backend: str = "topk",
+                   vocab_sizes=None) -> "BatchedEngine":
+        """Reconstruct a live capacity-slab engine from a restored
+        ``InsertState`` (DESIGN.md §10) with ZERO graph/atlas rebuild: the
+        slab already carries the patched adjacency and the incremental
+        atlas, so everything derived (device atlas CSR, validity bitmap,
+        the sequential-path FiberIndex view) is re-*emitted*, never
+        re-built. Further ``insert_batch`` calls continue seamlessly."""
+        from repro.core.batched.insert import emit_anchor_atlas, emit_graph
+
+        if len(state.shards) != 1:
+            raise ValueError(
+                f"BatchedEngine.from_state needs a 1-shard state, got "
+                f"{len(state.shards)} shards (use ShardedEngine)")
+        slab = state.shards[0]
+        eng = cls.__new__(cls)
+        eng.index = FiberIndex(
+            slab.vectors[: slab.n_valid].copy(),
+            slab.metadata[: slab.n_valid].copy(),
+            emit_graph(slab), emit_anchor_atlas(slab))
+        eng.p = params
+        eng._state = state
+        eng._refresh_from_slab(state.v_cap)
+        eng.vocab_sizes = (tuple(int(v) for v in vocab_sizes)
+                           if vocab_sizes is not None
+                           else eng.index.vocab_sizes())
+        eng.index.extend_vocab(eng.vocab_sizes)
+        eng._init_programs(seed_backend)
+        return eng
+
+    def _refresh_from_slab(self, v_cap: int) -> None:
+        """(Re)place the device arrays from the host slab mirror at fixed
+        shapes — shared by construction, ingest, and snapshot restore."""
+        from repro.core.batched.insert import emit_device_atlas
+
+        slab = self._state.shards[0]
+        self.datlas = emit_device_atlas(slab, v_cap)
+        self.vectors = jnp.asarray(slab.vectors)
+        self.adjacency = jnp.asarray(slab.adjacency)
+        self.metadata = jnp.asarray(slab.metadata)
+        self._valid_bm = pack_bits(jnp.asarray(slab.valid))
+
+    def _init_programs(self, seed_backend: str) -> None:
+        params = self.p
         on_cpu = jax.default_backend() == "cpu"  # donation unsupported there
         self._round = jax.jit(
             functools.partial(atlas_round, p=params,
@@ -537,20 +581,14 @@ class BatchedEngine:
         atlas update run on the host mirror, then the device arrays are
         refreshed at the same shapes (no recompile, no extra search
         dispatches). Returns the new rows' ids."""
-        from repro.core.batched.insert import (emit_device_atlas,
-                                               insert_rows)
+        from repro.core.batched.insert import insert_rows
 
         if self._state is None:
             raise ValueError(
                 "engine was built without spare capacity; construct "
                 "BatchedEngine(..., capacity=...) to enable insert_batch")
         gids, _ = insert_rows(self._state, vectors, metadata)
-        slab = self._state.shards[0]
-        self.vectors = jnp.asarray(slab.vectors)
-        self.adjacency = jnp.asarray(slab.adjacency)
-        self.metadata = jnp.asarray(slab.metadata)
-        self.datlas = emit_device_atlas(slab, self.datlas.v_cap)
-        self._valid_bm = pack_bits(jnp.asarray(slab.valid))
+        self._refresh_from_slab(self.datlas.v_cap)
         self.vocab_sizes = self._state.expand_vocab(self.vocab_sizes)
         # keep the sequential path's memoized domains in sync: Not /
         # open-ended-Range lowering reads index.vocab_sizes(), which would

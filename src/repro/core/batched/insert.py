@@ -40,6 +40,7 @@ import dataclasses
 import numpy as np
 import jax.numpy as jnp
 
+from repro import faults
 from repro.core.atlas import AnchorAtlas
 from repro.core.batched.bitmap import n_words
 from repro.core.device_atlas import DeviceAtlas
@@ -112,6 +113,10 @@ class InsertState:
     inserted: int = 0
     batches: int = 0
     repairs: int = 0
+    # highest journal sequence number whose rows are in the slabs: replay
+    # after recovery applies only records with seq > applied_seq, which is
+    # what makes re-running an already-applied batch a no-op (DESIGN.md §10)
+    applied_seq: int = 0
 
     @property
     def n_valid(self) -> int:
@@ -197,6 +202,11 @@ def _recluster(sh: ShardState, iters: int, seed: int) -> None:
 
 def _needs_recluster(sh: ShardState, p: InsertParams) -> bool:
     at = sh.atlas
+    if sh.n_valid < at.n_clusters:
+        # kmeans clamps K to the point count: re-clustering an underfull
+        # slab (e.g. an empty shard padded in by a cross-mesh restore)
+        # would shrink K and break the stacked shard_map atlas shapes
+        return False
     counts = np.bincount(at.assign[: sh.n_valid], minlength=at.n_clusters)
     grown = counts > p.recluster_occupancy * np.maximum(at.base_counts, 1)
     drift = 1.0 - np.einsum("kd,kd->k", at.centroids, at.base_centroids)
@@ -238,6 +248,9 @@ def insert_rows(state: InsertState, vectors: np.ndarray,
         sh.vectors[lo:hi] = vectors[rows]
         sh.metadata[lo:hi] = metadata[rows]
         sh.global_ids[lo:hi] = gids[rows]
+        # crash window the journal exists for: slab slots written, validity
+        # not yet flipped — a crash here must lose nothing after replay
+        faults.fire("ingest.post-slab-write")
         # appended rows get 1.5x the build's forward-edge count: a built
         # node's neighbourhood is symmetrized over the whole corpus, while
         # an appended node receives reverse edges only opportunistically

@@ -149,6 +149,26 @@ def build_sharded_index(vectors: np.ndarray, metadata: np.ndarray,
         insert_state=istate)
 
 
+def index_from_state(state: InsertState,
+                     vocab_sizes=None) -> ShardedIndex:
+    """Re-stack a device-ready ``ShardedIndex`` from a (restored) host
+    ``InsertState`` with ZERO graph/atlas rebuild: the slabs already carry
+    the patched adjacency and incremental atlases, so the device tables
+    are re-*emitted* at the same fixed shapes (DESIGN.md §10). The state
+    object is attached, so ingest continues where the snapshot left off."""
+    slabs = state.shards
+    return ShardedIndex(
+        vectors=jnp.asarray(np.stack([sl.vectors for sl in slabs])),
+        adjacency=jnp.asarray(np.stack([sl.adjacency for sl in slabs])),
+        metadata=jnp.asarray(np.stack([sl.metadata for sl in slabs])),
+        global_ids=jnp.asarray(np.stack([sl.global_ids for sl in slabs])),
+        valid_bm=pack_bits(jnp.asarray(np.stack([sl.valid
+                                                 for sl in slabs]))),
+        datlas=stack_atlases([emit_device_atlas(sl, state.v_cap)
+                              for sl in slabs]),
+        n=state.next_gid, vocab_sizes=vocab_sizes, insert_state=state)
+
+
 def merge_topk(all_v: jax.Array, all_i: jax.Array, k: int):
     """Exact cross-shard merge: (S, Q, k) per-shard top-ks -> (Q, k)
     global top-k. Ids are globally unique (a point lives on one shard), so
@@ -178,15 +198,23 @@ class ShardedEngine:
                  params: BatchedParams = BatchedParams(),
                  seed_backend: str = "topk", axis: str = "data"):
         s = sindex.n_shards
-        if index_axis_size(mesh, axis) != s:
+        if mesh is not None and index_axis_size(mesh, axis) != s:
             raise ValueError(
                 f"index has {s} shards but mesh axis {axis!r} spans "
                 f"{index_axis_size(mesh, axis)} devices")
         self.mesh, self.axis, self.p = mesh, axis, params
         self._seed_backend = seed_backend
         self._istate = sindex.insert_state
-        sh = index_shardings(mesh, axis)
-        put = functools.partial(jax.device_put, device=sh["rows"])
+        if mesh is not None:
+            sh = index_shardings(mesh, axis)
+            put = functools.partial(jax.device_put, device=sh["rows"])
+        else:
+            # reference mode (DESIGN.md §10): no mesh — everything lives
+            # on the default device and ``search`` runs the bit-identical
+            # shard-at-a-time reference path. This is how an S-shard
+            # snapshot restores onto a machine with fewer than S devices
+            # with zero rebuild and unchanged results.
+            put = jnp.asarray
         self._put = put
         self.vectors = put(sindex.vectors)
         self.adjacency = put(sindex.adjacency)
@@ -198,7 +226,8 @@ class ShardedEngine:
         self.v_cap = sindex.datlas.v_cap
         self.vocab_sizes = sindex.vocab_sizes
         self.n, self.n_shards = sindex.n, s
-        self._search = self._build_program(has_bounds=False)
+        self._search = (self._build_program(has_bounds=False)
+                        if mesh is not None else None)
         self._search_iv = None  # built lazily on the first interval query
         self._ref = jax.jit(
             lambda datlas, vec, adj, meta, vbm, qv, f, a, b: search_batch(
@@ -306,6 +335,13 @@ class ShardedEngine:
         dispatch, one host sync. Stats sum device work over shards (every
         shard walks every query)."""
         del seed
+        if self.mesh is None:
+            # reference mode: the same per-shard programs + merge, run
+            # shard-at-a-time on one device (one compiled invocation per
+            # shard instead of one shard_map dispatch)
+            out = self.search_reference(queries)
+            self.dispatches += self.n_shards
+            return out
         q_vecs, fields, allowed, bounds = pack_query_batch(
             queries, v_cap=self.v_cap, vocab_sizes=self.vocab_sizes)
         args = (*self._leaves, self.vectors, self.adjacency,

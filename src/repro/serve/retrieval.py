@@ -36,6 +36,12 @@ GRAPH_BUILD_DEFAULTS = {"graph_k": 32, "r_max": 96, "alpha": 1.2,
                         "n_clusters": None}
 
 
+def _engine_state(eng):
+    """The host InsertState behind either engine flavour (None when the
+    engine was built without append capacity)."""
+    return eng._istate if isinstance(eng, ShardedEngine) else eng._state
+
+
 @dataclasses.dataclass
 class RetrievalService:
     index: FiberIndex | None
@@ -52,6 +58,10 @@ class RetrievalService:
                                                       repr=False)
     _sharded: ShardedEngine | None = dataclasses.field(default=None,
                                                        repr=False)
+    # crash-consistency (DESIGN.md §10): attached by enable_durability /
+    # recover; when set, every ingest is journaled before it is applied
+    _store: object | None = dataclasses.field(default=None, repr=False)
+    _next_seq: int = dataclasses.field(default=1, repr=False)
 
     @staticmethod
     def build(ds: Dataset, *, graph_k: int = GRAPH_BUILD_DEFAULTS["graph_k"],
@@ -132,6 +142,17 @@ class RetrievalService:
     def _mesh_shards(self) -> int:
         return index_axis_size(self.mesh) if self.mesh is not None else 1
 
+    def _live_engine(self):
+        """The engine the batched paths route to: by mesh shape, except
+        that an engine attached by snapshot restore wins — a multi-shard
+        state recovered onto a meshless process serves through the sharded
+        engine's reference mode, not a freshly built global engine."""
+        if self._mesh_shards() > 1:
+            return self.sharded_engine()
+        if self._sharded is not None:
+            return self._sharded
+        return self.engine()
+
     def sharded_engine(self) -> ShardedEngine:
         """Lazily-built sharded engine (DESIGN.md §7): the corpus is
         re-partitioned row-wise over the mesh ``data`` axis with per-shard
@@ -180,8 +201,7 @@ class RetrievalService:
         q_real = len(predicates)
         if q_real == 0:
             return [], {}
-        eng = (self.sharded_engine() if self._mesh_shards() > 1
-               else self.engine())
+        eng = self._live_engine()
         v_cap = eng.v_cap if hasattr(eng, "v_cap") else eng.datlas.v_cap
         errors: list[str | None] = [None] * q_real
         checked = []
@@ -206,6 +226,42 @@ class RetrievalService:
             stats["errors"] = errors
         return ids[:q_real], stats
 
+    def _validate_ingest(self, vectors, metadata,
+                         eng) -> tuple[np.ndarray, np.ndarray]:
+        """Up-front ingest validation with clean errors (mirrors the
+        ``query_batch`` length check): shape/row-count/field-count/vocab
+        problems fail HERE — before the batch is journaled or any slab is
+        touched — never deep inside slab placement (and never poisoning
+        the recovery journal with an unappliable record)."""
+        vectors = np.asarray(vectors, np.float32)
+        metadata = np.atleast_2d(np.asarray(metadata, np.int32))
+        st = _engine_state(eng)
+        if vectors.ndim != 2:
+            raise ValueError(
+                f"ingest vectors must be 2-D (rows, dim); got shape "
+                f"{vectors.shape}")
+        d = st.shards[0].vectors.shape[1]
+        if vectors.shape[1] != d:
+            raise ValueError(
+                f"ingest vectors have dim {vectors.shape[1]}, the index "
+                f"serves dim {d}")
+        if vectors.shape[0] != metadata.shape[0]:
+            raise ValueError(
+                f"ingest got {vectors.shape[0]} vectors but "
+                f"{metadata.shape[0]} metadata rows; one metadata row per "
+                f"vector is required")
+        f_count = st.shards[0].metadata.shape[1]
+        if metadata.shape[1] != f_count:
+            raise ValueError(
+                f"ingest metadata has {metadata.shape[1]} fields, the "
+                f"index declares {f_count}")
+        if metadata.size and int(metadata.max()) >= st.v_cap:
+            raise ValueError(
+                f"ingest metadata code {int(metadata.max())} is outside "
+                f"the declared vocab domain [0, {st.v_cap}); rebuild with "
+                f"a larger v_cap to serve it")
+        return vectors, metadata
+
     def ingest(self, vectors: np.ndarray,
                metadata: np.ndarray) -> np.ndarray:
         """Append documents to the live serving index (DESIGN.md §9):
@@ -213,15 +269,116 @@ class RetrievalService:
         mesh partitions the corpus), so newly ingested rows are visible to
         the very next batch without a rebuild. Requires the service to
         have been built with spare ``capacity``. Returns the new rows'
-        global ids."""
+        global ids.
+
+        With durability enabled the batch is appended to the write-ahead
+        journal (CRC-framed, fsynced) BEFORE any validity bit flips — a
+        crash at any point after the journal write is recoverable by
+        replay, and a crash during it leaves a torn tail that recovery
+        drops (the caller never got an ack)."""
         if self.capacity is None:
             raise ValueError(
                 "service was built without ingest capacity; pass "
                 "capacity=... to RetrievalService.build to reserve append "
                 "room")
-        eng = (self.sharded_engine() if self._mesh_shards() > 1
-               else self.engine())
-        return eng.insert_batch(vectors, metadata)
+        eng = self._live_engine()
+        vectors, metadata = self._validate_ingest(vectors, metadata, eng)
+        seq = self._next_seq
+        if self._store is not None:
+            self._store.journal.append(seq, vectors, metadata)
+        gids = eng.insert_batch(vectors, metadata)
+        if self._store is not None:
+            _engine_state(eng).applied_seq = seq
+            self._next_seq = seq + 1
+        return gids
+
+    # -- durability: snapshot / restore / recover (DESIGN.md §10) ----------
+
+    def enable_durability(self, path: str, *, keep: int = 3,
+                          snapshot_now: bool = True):
+        """Attach a durability root at ``path``: subsequent ``ingest``
+        calls are write-ahead journaled, and ``snapshot()`` persists the
+        complete engine state. With ``snapshot_now`` (default) a first
+        snapshot is taken immediately, so the service is recoverable from
+        the moment this returns. Returns the ``DurableStore``."""
+        from repro.serve.durability import DurableStore
+
+        if self.capacity is None:
+            raise ValueError(
+                "durability needs an ingest-capable service; pass "
+                "capacity=... to RetrievalService.build")
+        self._store = DurableStore(path, keep=keep)
+        st = _engine_state(self._live_engine())
+        recs, _ = self._store.journal.read()
+        self._next_seq = max([st.applied_seq] + [r[0] for r in recs]) + 1
+        if snapshot_now:
+            self.snapshot()
+        return self._store
+
+    def snapshot(self) -> int:
+        """Persist the complete mutable engine state through the atomic
+        checkpoint format and truncate the journal. Returns the snapshot
+        step (= ``applied_seq``)."""
+        if self._store is None:
+            raise ValueError("no durability store attached; call "
+                             "enable_durability(path) first")
+        eng = self._live_engine()
+        extra = {"search_params": dataclasses.asdict(self.params),
+                 "graph_build": self._gb(),
+                 "capacity": self.capacity,
+                 "vocab_sizes": (list(eng.vocab_sizes)
+                                 if eng.vocab_sizes is not None else None)}
+        return self._store.snapshot(_engine_state(eng), extra)
+
+    @classmethod
+    def recover(cls, path: str, *, mesh=None,
+                params: SearchParams | None = None,
+                replay: bool = True) -> "RetrievalService":
+        """Bring a service back from its durability root: load the latest
+        *readable* snapshot, reconstruct the engine for THIS process's
+        mesh (zero graph/atlas rebuild; cross-mesh via reshard / empty-slab
+        padding / reference mode), replay the journal suffix
+        (``seq > applied_seq``, idempotent) through the normal insert
+        path, truncate any torn tail, and serve. Corrupted journal or
+        snapshot bytes raise a clean error — they are never served."""
+        from repro.serve.durability import DurableStore, engine_from_state
+
+        store = DurableStore(path)
+        state, extra, _step = store.load_latest()
+        sp = params if params is not None else SearchParams(
+            **extra["search_params"])
+        svc = cls(None, sp, mesh=mesh,
+                  graph_build=dict(extra.get("graph_build") or {}),
+                  capacity=extra.get("capacity"))
+        vocab = (tuple(extra["vocab_sizes"])
+                 if extra.get("vocab_sizes") else None)
+        eng = engine_from_state(state, mesh=mesh,
+                                params=svc._batched_params(),
+                                vocab_sizes=vocab)
+        if isinstance(eng, BatchedEngine):
+            svc._engine = eng
+            svc.index = eng.index  # the sequential path works post-restore
+        else:
+            svc._sharded = eng
+        svc._store = store
+        recs, _ = store.journal.read()
+        last = max([state.applied_seq] + [r[0] for r in recs])
+        if replay:
+            for seq, vecs, meta in recs:
+                if seq > state.applied_seq:
+                    eng.insert_batch(vecs, meta)
+                    state.applied_seq = seq
+            store.journal.repair()
+        svc._next_seq = last + 1
+        return svc
+
+    @classmethod
+    def restore(cls, path: str, *, mesh=None,
+                params: SearchParams | None = None) -> "RetrievalService":
+        """Snapshot-only restore: the service exactly as of the latest
+        readable snapshot, journal suffix NOT replayed (sequence numbers
+        still advance past it, so later ingests never collide)."""
+        return cls.recover(path, mesh=mesh, params=params, replay=False)
 
     def staleness(self) -> dict:
         """Ingest/staleness accounting: how much of the serving corpus is

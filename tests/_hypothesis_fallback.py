@@ -68,9 +68,12 @@ def settings(max_examples: int = 20, deadline=None, **_ignored):
 
 def given(*strats):
     def deco(fn):
-        n = getattr(fn, "_fallback_max_examples", 20)
-
         def run():
+            # read at call time: ``@settings`` is conventionally stacked
+            # ABOVE ``@given``, so it decorates (and tags) the wrapper
+            # after this closure is built
+            n = getattr(run, "_fallback_max_examples",
+                        getattr(fn, "_fallback_max_examples", 20))
             for i in range(n):
                 rng = np.random.default_rng(i)
                 fn(*[s.example(rng) for s in strats])

@@ -53,3 +53,107 @@ def test_shape_mismatch_raises(tmp_path):
            "opt": {"step": jnp.asarray(0, jnp.int32)}}
     with pytest.raises(ValueError, match="shape mismatch"):
         ckpt.restore(str(tmp_path), 1, bad)
+
+
+# -- durability satellites (ISSUE 7) ----------------------------------------
+
+def test_async_failure_reraised_on_next_save(tmp_path, monkeypatch):
+    """A failed async write must not be silent: the failure is recorded
+    and re-raised by the next ``save`` for that directory (and by an
+    explicit ``wait()``), so a dead writer can't masquerade as healthy."""
+    t = _tree()
+
+    def boom(*a, **k):
+        raise OSError("disk gone")
+
+    monkeypatch.setattr(ckpt.np, "savez", boom)
+    th = ckpt.save(str(tmp_path), 1, t, asynchronous=True)
+    with pytest.raises(RuntimeError, match="async checkpoint write failed"):
+        th.wait()
+    monkeypatch.undo()
+    with pytest.raises(RuntimeError, match="previous asynchronous"):
+        ckpt.save(str(tmp_path), 2, t)
+    # the failure is consumed: the save after the re-raise succeeds
+    ckpt.save(str(tmp_path), 2, t)
+    assert ckpt.latest_step(str(tmp_path)) == 2
+
+
+def test_stale_tmp_swept_on_save(tmp_path):
+    t = _tree()
+    os.makedirs(tmp_path / "step_00000009.tmp")  # a crashed writer's debris
+    ckpt.save(str(tmp_path), 1, t)
+    assert not (tmp_path / "step_00000009.tmp").exists()
+    assert ckpt.latest_step(str(tmp_path)) == 1
+
+
+def test_checksum_detects_corruption(tmp_path):
+    """A flipped byte in arrays.npz must be a loud CheckpointCorruption
+    from the verifying loader, never silently restored garbage."""
+    t = _tree()
+    ckpt.save(str(tmp_path), 4, t)
+    f = tmp_path / "step_00000004" / "arrays.npz"
+    raw = bytearray(f.read_bytes())
+    # flip one byte of the w leaf's actual data (np.savez stores raw
+    # bytes, so the array's buffer appears verbatim in the file)
+    sig = np.asarray(t["params"]["w"]).tobytes()[:8]
+    at = raw.find(sig)
+    assert at >= 0
+    raw[at + 3] ^= 0xFF
+    f.write_bytes(bytes(raw))
+    with pytest.raises(ckpt.CheckpointCorruption):
+        ckpt.load_arrays(str(tmp_path), 4)
+
+
+def test_manifest_crc_detects_swapped_arrays(tmp_path):
+    """The manifest-level CRC catches corruption the zip layer can't: a
+    structurally valid arrays.npz whose contents don't match the manifest
+    (e.g. a partially synced or mixed-up step directory)."""
+    import json
+    import shutil
+
+    ckpt.save(str(tmp_path), 1, _tree(seed=1))
+    ckpt.save(str(tmp_path), 2, _tree(seed=2))
+    shutil.copy(tmp_path / "step_00000001" / "arrays.npz",
+                tmp_path / "step_00000002" / "arrays.npz")
+    with pytest.raises(ckpt.CheckpointCorruption, match="CRC32"):
+        ckpt.load_arrays(str(tmp_path), 2)
+    # verify=False is the explicit escape hatch
+    arrays, _ = ckpt.load_arrays(str(tmp_path), 2, verify=False)
+    assert "params/w" in arrays
+    # manifests without a crc table (pre-checksum format) stay readable
+    m = tmp_path / "step_00000001" / "manifest.json"
+    d = json.loads(m.read_text())
+    del d["crc32"]
+    m.write_text(json.dumps(d))
+    arrays, _ = ckpt.load_arrays(str(tmp_path), 1)
+    assert "params/w" in arrays
+
+
+def test_restore_latest_falls_back_to_readable(tmp_path):
+    """restore_latest walks newest-first and returns the first READABLE
+    step: a corrupted newest checkpoint degrades to the previous snapshot
+    instead of stranding the directory."""
+    t = _tree(seed=1)
+    t2 = _tree(seed=2)
+    ckpt.save(str(tmp_path), 1, t)
+    ckpt.save(str(tmp_path), 2, t2)
+    npz = tmp_path / "step_00000002" / "arrays.npz"
+    raw = bytearray(npz.read_bytes())
+    at = raw.find(np.asarray(t2["params"]["w"]).tobytes()[:8])
+    assert at >= 0
+    raw[at + 3] ^= 0xFF
+    npz.write_bytes(bytes(raw))
+    restored, step = ckpt.restore_latest(str(tmp_path), t)
+    assert step == 1
+    np.testing.assert_allclose(np.asarray(restored["params"]["w"]),
+                               np.asarray(t["params"]["w"]))
+    # template-free flavour falls back the same way
+    (arrays, manifest), step2 = ckpt.restore_latest(str(tmp_path))
+    assert step2 == 1 and "params/w" in arrays
+    # with EVERY step unreadable the error is clean and lists attempts
+    m = tmp_path / "step_00000001" / "manifest.json"
+    m.write_text("{not json")
+    with pytest.raises(ckpt.CheckpointCorruption, match="no readable"):
+        ckpt.restore_latest(str(tmp_path))
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore_latest(str(tmp_path / "empty"))
