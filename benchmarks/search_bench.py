@@ -41,7 +41,8 @@ import time
 import numpy as np
 
 from repro.core.atlas import AnchorAtlas
-from repro.core.batched.engine import BatchedEngine, BatchedParams
+from repro.core.batched.engine import BatchedEngine
+from repro.core.config import FnsConfig
 from repro.core.graph import build_alpha_knn
 from repro.core.search import FiberIndex
 from repro.data.ground_truth import attach_ground_truth, recall_at_k
@@ -54,6 +55,45 @@ SELECTIVITIES = (0.5, 0.1, 0.02)
 OR_SELECTIVITIES = (0.1, 0.02)
 BATCH_SIZES = (16, 64, 256)
 OUT_PATH = "BENCH_search.json"
+TUNED_PATH = os.path.join("results", "tuned_cpu.json")
+
+
+def bench_config(*, k: int = 10, graph_k: int = 16,
+                 knobs: dict | None = None) -> FnsConfig:
+    """The benchmark's single FnsConfig origin: every engine below is
+    constructed from (a knob-overridden copy of) this tree, so a bench row
+    and a serving engine built from the same fingerprint run the same
+    program. The historical bench values (r_max = 3*graph_k, lockstep
+    beam 4) are expressed as knobs here, not re-hard-coded at call sites."""
+    cfg = FnsConfig().with_knobs({"walk.k": k, "walk.beam_width": 4,
+                                  "graph.graph_k": graph_k,
+                                  "graph.r_max": 3 * graph_k})
+    return cfg.with_knobs(knobs) if knobs else cfg
+
+
+def build_search_fixture(selectivities=SELECTIVITIES, *, n: int = 8000,
+                         d: int = 64, seed: int = 7,
+                         config: FnsConfig):
+    """The shared corpus recipe (selectivity-planted clusters -> α-kNN
+    graph -> anchor atlas), built from one config. Returns (ds, index);
+    the autotuner and every bench family reuse this so their numbers are
+    comparable."""
+    ds = make_selectivity_dataset(selectivities, n=n, d=d, n_components=24,
+                                  seed=seed)
+    graph = build_alpha_knn(ds.vectors, config=config.graph)
+    atlas = AnchorAtlas.build(ds, n_clusters=config.atlas.n_clusters,
+                              seed=config.atlas.kmeans_seed)
+    return ds, FiberIndex(ds.vectors, ds.metadata, graph, atlas)
+
+
+def make_query_pools(ds, selectivities, q_max: int, k: int) -> dict:
+    """Per-selectivity query pools with ground truth attached."""
+    pools = {}
+    for si, s in enumerate(selectivities):
+        qs = make_selectivity_queries(ds, si, q_max)
+        attach_ground_truth(ds, qs, k=k)
+        pools[s] = qs
+    return pools
 
 
 def measure_batch(eng, batch, reps: int) -> dict:
@@ -85,33 +125,57 @@ def measure_batch(eng, batch, reps: int) -> dict:
 
 def search_bench(batch_sizes=BATCH_SIZES, selectivities=SELECTIVITIES, *,
                  n: int = 8000, d: int = 64, k: int = 10, reps: int = 20,
-                 graph_k: int = 16, seed: int = 7) -> dict:
+                 graph_k: int = 16, seed: int = 7,
+                 config: FnsConfig | None = None,
+                 key_prefix: str = "") -> dict:
     """Fused single-dispatch engine over the Q x selectivity grid. Returns
     {"qN/selS": {qps, p50_ms, p99_ms, recall, walks, hops, mask_state_bytes,
-    dispatches_per_batch}} plus a "config" entry."""
-    ds = make_selectivity_dataset(selectivities, n=n, d=d, n_components=24,
-                                  seed=seed)
-    graph = build_alpha_knn(ds.vectors, k=graph_k, r_max=3 * graph_k,
-                            alpha=1.2)
-    atlas = AnchorAtlas.build(ds, seed=0)
-    index = FiberIndex(ds.vectors, ds.metadata, graph, atlas)
-    eng = BatchedEngine(index, BatchedParams(k=k, beam_width=4))
+    dispatches_per_batch}} plus a "config" entry carrying the full knob
+    provenance (fingerprint + flattened FnsConfig) next to the run shape.
+    ``config`` overrides the k/graph_k kwargs; ``key_prefix`` namespaces
+    the row keys (the tuned rows use ``tuned/``)."""
+    cfg = config if config is not None else bench_config(k=k,
+                                                         graph_k=graph_k)
+    k = cfg.walk.k
+    ds, index = build_search_fixture(selectivities, n=n, d=d, seed=seed,
+                                     config=cfg)
+    eng = BatchedEngine(index, config=cfg)
     n_words = (n + 31) // 32
-    out: dict = {"config": {"n": n, "d": d, "k": k, "reps": reps,
-                            "graph_k": graph_k,
-                            "backend": __import__("jax").default_backend()}}
-    q_max = max(batch_sizes)
-    pools = {}
-    for si, s in enumerate(selectivities):
-        qs = make_selectivity_queries(ds, si, q_max)
-        attach_ground_truth(ds, qs, k=k)
-        pools[s] = qs
+    out: dict = {}
+    if not key_prefix:
+        out["config"] = {"n": n, "d": d, "k": k, "reps": reps,
+                         "graph_k": cfg.graph.graph_k,
+                         "backend": __import__("jax").default_backend(),
+                         "fingerprint": cfg.fingerprint(),
+                         "knobs": cfg.flatten()}
+    pools = make_query_pools(ds, selectivities, max(batch_sizes), k)
     for q_n in batch_sizes:
-        for si, sel in enumerate(selectivities):
+        for sel in selectivities:
             row = measure_batch(eng, pools[sel][:q_n], reps)
             row["mask_state_bytes"] = 3 * q_n * n_words * 4
-            out[f"q{q_n}/sel{sel}"] = row
+            if key_prefix:
+                row["fingerprint"] = cfg.fingerprint()
+            out[f"{key_prefix}q{q_n}/sel{sel}"] = row
     return out
+
+
+def tuned_search_bench(tuned_path: str = TUNED_PATH, batch_sizes=(64,),
+                       selectivities=SELECTIVITIES, *, n: int = 8000,
+                       d: int = 64, k: int = 10, reps: int = 20,
+                       graph_k: int = 16, seed: int = 7) -> dict:
+    """Tuned-engine rows (``tuned/qN/selS``): the ``search_bench`` grid
+    re-run under the autotuner's chosen walk knobs (``tune/autotune.py``
+    artifact at ``tuned_path``). Only ``walk.*`` knobs are taken from the
+    artifact — shape-baked knobs stay the fixture's, so the rows differ
+    from the untuned ones by runtime-tunable parameters alone and each
+    carries the tuned config's fingerprint."""
+    with open(tuned_path) as f:
+        tuned = json.load(f)
+    cfg = bench_config(k=k, graph_k=graph_k,
+                       knobs={p: v for p, v in tuned["config"].items()
+                              if p.startswith("walk.") and p != "walk.k"})
+    return search_bench(batch_sizes, selectivities, n=n, d=d, reps=reps,
+                        seed=seed, config=cfg, key_prefix="tuned/")
 
 
 def or_search_bench(batch_sizes=(64,), or_sels=OR_SELECTIVITIES, *,
@@ -128,15 +192,14 @@ def or_search_bench(batch_sizes=(64,), or_sels=OR_SELECTIVITIES, *,
     from repro.core.batched.bitmap import pack_bits
     from repro.core.batched.engine import _eval_passes
 
+    cfg = bench_config(k=k, graph_k=graph_k)
     ds = add_or_pair_fields(
         make_selectivity_dataset(SELECTIVITIES, n=n, d=d, n_components=24,
                                  seed=seed), sels=or_sels)
-    graph = build_alpha_knn(ds.vectors, k=graph_k, r_max=3 * graph_k,
-                            alpha=1.2)
-    atlas = AnchorAtlas.build(ds, seed=0)
+    graph = build_alpha_knn(ds.vectors, config=cfg.graph)
+    atlas = AnchorAtlas.build(ds, seed=cfg.atlas.kmeans_seed)
     index = FiberIndex(ds.vectors, ds.metadata, graph, atlas)
-    eng = BatchedEngine(index, BatchedParams(k=k, beam_width=4),
-                        vocab_sizes=ds.vocab_sizes)
+    eng = BatchedEngine(index, config=cfg, vocab_sizes=ds.vocab_sizes)
     n_words = (n + 31) // 32
     out: dict = {}
     q_max = max(batch_sizes)
@@ -189,16 +252,15 @@ def range_search_bench(batch_sizes=(64,), range_sels=SELECTIVITIES, *,
     from repro.core.batched.engine import _eval_passes
     from repro.core.types import FilterPredicate, Query
 
+    cfg = bench_config(k=k, graph_k=graph_k)
     ds = add_timestamp_field(
         make_selectivity_dataset(SELECTIVITIES, n=n, d=d, n_components=24,
                                  seed=seed))
     ds = add_window_indicator_fields(ds, range_sels)
-    graph = build_alpha_knn(ds.vectors, k=graph_k, r_max=3 * graph_k,
-                            alpha=1.2)
-    atlas = AnchorAtlas.build(ds, seed=0)
+    graph = build_alpha_knn(ds.vectors, config=cfg.graph)
+    atlas = AnchorAtlas.build(ds, seed=cfg.atlas.kmeans_seed)
     index = FiberIndex(ds.vectors, ds.metadata, graph, atlas)
-    eng = BatchedEngine(index, BatchedParams(k=k, beam_width=4),
-                        vocab_sizes=ds.vocab_sizes)
+    eng = BatchedEngine(index, config=cfg, vocab_sizes=ds.vocab_sizes)
     n_words = (n + 31) // 32
     out: dict = {}
     q_max = max(batch_sizes)
@@ -258,12 +320,12 @@ def sharded_search_bench(batch_sizes=(64,), selectivities=SELECTIVITIES, *,
 
     n_dev = len(jax.devices())
     s = n_shards or min(8, 1 << (n_dev.bit_length() - 1))
+    cfg = bench_config(k=k, graph_k=graph_k)
     ds = make_selectivity_dataset(selectivities, n=n, d=d, n_components=24,
                                   seed=seed)
-    sidx = build_sharded_index(ds.vectors, ds.metadata, s, graph_k=graph_k,
-                               r_max=3 * graph_k, alpha=1.2)
+    sidx = build_sharded_index(ds.vectors, ds.metadata, s, config=cfg)
     mesh = make_local_mesh(data=s, model=1)
-    eng = ShardedEngine(sidx, mesh, BatchedParams(k=k, beam_width=4))
+    eng = ShardedEngine(sidx, mesh, config=cfg)
     m_words = (sidx.rows_per_shard + 31) // 32
     out: dict = {}
     q_max = max(batch_sizes)
@@ -292,22 +354,21 @@ def insert_bench(batch_sizes=(64, 256, 1024), *, n: int = 8000, d: int = 64,
     refresh). A final ``post_insert/q64/sel0.1`` row re-measures search QPS
     and recall on the grown index, so ingest-induced recall or latency
     drift shows up next to the static rows it must match."""
+    cfg = bench_config(k=k, graph_k=graph_k,
+                       knobs={"serve.capacity": n})
     ds = make_selectivity_dataset(SELECTIVITIES, n=n, d=d, n_components=24,
                                   seed=seed)
     total_ins = sum(batch_sizes)
     if total_ins >= n:
         raise ValueError(f"insert batches ({total_ins}) exceed corpus {n}")
     base_n = n - total_ins
-    graph = build_alpha_knn(ds.vectors[:base_n], k=graph_k,
-                            r_max=3 * graph_k, alpha=1.2)
+    graph = build_alpha_knn(ds.vectors[:base_n], config=cfg.graph)
     from repro.core.types import Dataset
     base = Dataset(ds.vectors[:base_n], ds.metadata[:base_n],
                    ds.field_names, ds.vocab_sizes)
-    atlas = AnchorAtlas.build(base, seed=0)
+    atlas = AnchorAtlas.build(base, seed=cfg.atlas.kmeans_seed)
     index = FiberIndex(base.vectors, base.metadata, graph, atlas)
-    eng = BatchedEngine(index, BatchedParams(k=k, beam_width=4),
-                        vocab_sizes=ds.vocab_sizes, capacity=n,
-                        graph_k=graph_k)
+    eng = BatchedEngine(index, config=cfg, vocab_sizes=ds.vocab_sizes)
     out: dict = {}
     written = base_n
     for b in batch_sizes:
@@ -366,8 +427,10 @@ def durability_bench(*, n: int = 8000, d: int = 64, k: int = 10,
         raise ValueError(f"durability chunks ({grown}) exceed corpus {n}")
     base = Dataset(ds.vectors[:base_n], ds.metadata[:base_n],
                    ds.field_names, ds.vocab_sizes)
-    svc = RetrievalService.build(base, graph_k=graph_k, r_max=3 * graph_k,
-                                 params=SearchParams(k=k), capacity=n)
+    svc = RetrievalService.build(
+        base, config=bench_config(k=k, graph_k=graph_k,
+                                  knobs={"serve.capacity": n}),
+        params=SearchParams(k=k))
     root = tempfile.mkdtemp(prefix="fns_durability_bench_")
     out: dict = {}
     try:
@@ -459,8 +522,20 @@ def main(smoke: bool = False) -> dict:
         results.update(durability_bench(n=600, d=16, k=5, reps=1,
                                         graph_k=8, chunk=8, n_chunks=2,
                                         q_post=2))
+        # and the tuned-config path when the autotuner artifact is
+        # committed: same tiny corpus under the tuned walk knobs (the CI
+        # bench-regression gate compares these rows to its baseline)
+        if os.path.exists(TUNED_PATH):
+            results.update(tuned_search_bench(
+                batch_sizes=(2,), selectivities=(0.5,), n=600, d=16, k=5,
+                reps=1, graph_k=8))
     else:
         results = search_bench()
+        # tuned rows directly after the untuned grid: the acceptance bar
+        # compares their p50s, so the pair must be measured back-to-back
+        # under the same machine state, not at opposite ends of the run
+        if os.path.exists(TUNED_PATH):
+            results.update(tuned_search_bench())
         results.update(sharded_search_bench())
         results.update(or_search_bench())
         results.update(range_search_bench())

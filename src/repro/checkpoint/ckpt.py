@@ -96,8 +96,12 @@ def _sweep_stale_tmp(ckpt_dir: str) -> None:
 
 
 def save(ckpt_dir: str, step: int, tree, *, asynchronous: bool = False,
-         keep: int = 3) -> AsyncSave | None:
-    """Write checkpoint for ``step``. With asynchronous=True the device→host
+         keep: int = 3, meta: dict | None = None) -> AsyncSave | None:
+    """Write checkpoint for ``step``. ``meta`` is an optional caller-owned
+    JSON-serializable dict recorded verbatim in the manifest (e.g. the
+    serving config fingerprint + knob dict, so two snapshots are
+    comparable from the manifest alone, without loading the arrays).
+    With asynchronous=True the device→host
     copy happens inline (consistent snapshot) and the file write runs in a
     daemon thread; returns the ``AsyncSave`` handle. A failure in a
     previous async write for this directory is re-raised here, so silent
@@ -115,6 +119,8 @@ def save(ckpt_dir: str, step: int, tree, *, asynchronous: bool = False,
                 "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
                            for k, v in host.items()},
                 "crc32": {k: _leaf_crc(v) for k, v in host.items()}}
+    if meta is not None:
+        manifest["meta"] = meta
     name = f"step_{step:08d}"
     tmp = os.path.join(ckpt_dir, name + ".tmp")
     final = os.path.join(ckpt_dir, name)

@@ -34,6 +34,8 @@ import jax.numpy as jnp
 
 from repro.core.batched.bitmap import (n_words, pack_bits, popcount,
                                        set_bits, test_bits, unpack_bits)
+from repro.core.config import (FnsConfig, KernelConfig, WalkConfig,
+                               check_state_config, coerce_config)
 from repro.core.device_atlas import (DeviceAtlas, pack_dnf, pack_predicates,
                                      table_n_disj)
 from repro.core.predicate import DNF, as_dnf, disjunct_selectivity
@@ -46,22 +48,10 @@ INF = jnp.float32(3.4e38)
 
 TERM_RUNNING, TERM_CONVERGED, TERM_EARLY, TERM_STALL, TERM_MAXHOP = 0, 1, 2, 3, 4
 
-
-@dataclasses.dataclass(frozen=True)
-class BatchedParams:
-    k: int = 25
-    beam_width: int = 4
-    frontier_cap: int = 16
-    frontier_width: int = 5     # K_f pushes per expansion
-    stall_budget: int = 100
-    max_hops: int = 100
-    jump_budget: int = 3
-    n_seeds: int = 10
-    c_max: int = 5
-    # minimum anchor-seed quota per live disjunct (DNF queries only): a
-    # starved disjunct gets its best cluster visited + this many seeds, so
-    # a dominant disjunct can't monopolize the restart budget
-    disjunct_quota: int = 2
+# the walk-budget section of the unified config tree (core/config.py) IS
+# the engine's parameter object; the historical name stays importable and
+# constructible so every existing call site keeps working
+BatchedParams = WalkConfig
 
 
 def _merge_queue(q_v, q_i, new_v, new_i, cap: int):
@@ -90,19 +80,22 @@ def _expand_scores(q_vecs, vectors, nbrs, pass_bm):
     return ref.fiber_expand_walk(q_vecs, vectors, nbrs, pass_bm)
 
 
-def _eval_passes(metadata, fields, allowed, bounds=None):
+def _eval_passes(metadata, fields, allowed, bounds=None,
+                 kcfg: KernelConfig | None = None):
     """Batched predicate evaluation -> packed (Q, ceil(n/32)) uint32 pass
     bitmaps: the filter_eval Pallas corpus sweep on TPU, the jnp oracle
     elsewhere. Disjunctive (Q, D, C) tables carry their live-disjunct
     counts in the dead-disjunct sentinel; the kernels OR the per-disjunct
     conjunctive bitmaps in the same sweep (DESIGN.md §8). ``bounds``
     (Q, D, C, 2) marks interval clauses (evaluated as two comparisons,
-    short-circuited rarest-first; None keeps legacy programs)."""
+    short-circuited rarest-first; None keeps legacy programs). ``kcfg``
+    sizes the kernel's corpus tile (CPU oracle has no tiles)."""
     n_disj = table_n_disj(fields) if fields.ndim == 3 else None
     if jax.default_backend() == "tpu":
         from repro.kernels.filter_eval import filter_eval_batch
+        tn = (kcfg or KernelConfig()).filter_tile
         return filter_eval_batch(metadata, fields, allowed, n_disj, bounds,
-                                 interpret=False)
+                                 tn=tn, interpret=False)
     return ref.filter_eval_batch(metadata, fields, allowed, n_disj, bounds)
 
 
@@ -274,7 +267,8 @@ def walk_batch(vectors, adjacency, pass_bm, q_vecs, seeds,
 
 def atlas_round(datlas: DeviceAtlas, vectors, adjacency, pass_bm, passes,
                 q_vecs, fields, allowed, processed, need, res_v, res_i,
-                p: BatchedParams, seed_backend: str, bounds=None):
+                p: BatchedParams, seed_backend: str, bounds=None,
+                kcfg: KernelConfig | None = None):
     """One full restart round for all Q queries on device: batched anchor
     selection from the packed atlas, then the lockstep walk. ``pass_bm``
     is the packed (Q, ceil(n/32)) uint32 filter bitmap the walk carries;
@@ -290,7 +284,7 @@ def atlas_round(datlas: DeviceAtlas, vectors, adjacency, pass_bm, passes,
     seeds, used = datlas.select_anchors_batch(
         q_vecs, tables, gate, vectors, passes,
         n_seeds=p.n_seeds, c_max=p.c_max, backend=seed_backend,
-        disjunct_quota=p.disjunct_quota)
+        disjunct_quota=p.disjunct_quota, kcfg=kcfg)
     out = walk_batch(vectors, adjacency, pass_bm, q_vecs, seeds, p,
                      init_results=(res_v, res_i))
     found = (out["res_v"] < INF / 2).sum(axis=1)
@@ -301,7 +295,8 @@ def atlas_round(datlas: DeviceAtlas, vectors, adjacency, pass_bm, passes,
 
 def search_batch(datlas: DeviceAtlas, vectors, adjacency, metadata, q_vecs,
                  fields, allowed, p: BatchedParams, seed_backend: str,
-                 valid_bm=None, bounds=None):
+                 valid_bm=None, bounds=None,
+                 kcfg: KernelConfig | None = None):
     """A whole filtered search batch as ONE device program: batched
     predicate evaluation, then a ``lax.while_loop`` over restart rounds
     (each round = ``atlas_round``). "Anyone seeded?" / "anyone still short
@@ -317,7 +312,7 @@ def search_batch(datlas: DeviceAtlas, vectors, adjacency, metadata, q_vecs,
     predicate, which an empty clause table would otherwise let through.
     """
     Q = q_vecs.shape[0]
-    pass_bm = _eval_passes(metadata, fields, allowed, bounds)
+    pass_bm = _eval_passes(metadata, fields, allowed, bounds, kcfg)
     if valid_bm is not None:
         pass_bm = pass_bm & valid_bm[None, :]
     # the dense unpack feeds only selection math and is round-invariant:
@@ -342,7 +337,8 @@ def search_batch(datlas: DeviceAtlas, vectors, adjacency, metadata, q_vecs,
         out = atlas_round(datlas, vectors, adjacency, pass_bm, passes,
                           q_vecs, fields, allowed, c["processed"], c["need"],
                           c["res_v"], c["res_i"], p=p,
-                          seed_backend=seed_backend, bounds=bounds)
+                          seed_backend=seed_backend, bounds=bounds,
+                          kcfg=kcfg)
         seeded = out["seeded"]
         any_seeded = seeded.any()
         res_v = jnp.where(any_seeded, out["res_v"], c["res_v"])
@@ -454,27 +450,52 @@ class BatchedEngine:
     migration baseline. On non-CPU backends the per-round state buffers
     (processed/need/res_v/res_i) are donated into the round call.
 
-    ``capacity`` (DESIGN.md §9) turns the device index into an append-able
-    capacity slab: arrays are sized to ``capacity`` rows, a row-validity
-    bitmap masks the unwritten tail out of every pass set, and
-    ``insert_batch`` grows the corpus in place (graph repair + incremental
-    atlas update on a host mirror, then a same-shape device refresh — the
-    compiled search program is reused, and ``self.index`` keeps the
-    build-time snapshot). ``graph_k``/``alpha`` are the append path's
-    forward-edge count and α-RNG slack.
+    ``serve.capacity`` (DESIGN.md §9) turns the device index into an
+    append-able capacity slab: arrays are sized to ``capacity`` rows, a
+    row-validity bitmap masks the unwritten tail out of every pass set,
+    and ``insert_batch`` grows the corpus in place (graph repair +
+    incremental atlas update on a host mirror, then a same-shape device
+    refresh — the compiled search program is reused, and ``self.index``
+    keeps the build-time snapshot). ``graph.graph_k``/``graph.alpha`` are
+    the append path's forward-edge count and α-RNG slack.
+
+    Every knob arrives through one ``FnsConfig`` (``config=``, stored as
+    ``self.cfg``); the historical kwargs (``params=``/positional
+    BatchedParams, ``capacity=``, ``graph_k=``, ``alpha=``) are
+    deprecation shims that warn once and fold into it.
     """
 
-    def __init__(self, index: FiberIndex,
-                 params: BatchedParams = BatchedParams(),
-                 seed_backend: str = "topk", v_cap: int | None = None,
+    def __init__(self, index: FiberIndex, config=None,
+                 seed_backend: str | None = None, v_cap: int | None = None,
                  vocab_sizes=None, capacity: int | None = None,
-                 graph_k: int = 16, alpha: float = 1.2):
+                 graph_k: int | None = None, alpha: float | None = None,
+                 params: BatchedParams | None = None):
         from repro.core.batched.insert import (InsertState,
                                                emit_device_atlas,
                                                make_shard_state)
 
+        if config is None:
+            config = params
+        # this entry point's historical append-path default (graph_k=16)
+        # predates the config tree's 32; applied silently unless a full
+        # FnsConfig states otherwise
+        cfg = coerce_config(config,
+                            {"serve.capacity": capacity,
+                             "graph.graph_k": graph_k,
+                             "graph.alpha": alpha},
+                            where="BatchedEngine",
+                            defaults={"graph.graph_k": 16})
+        # non-knob plumbing args (backend choice, bitmap width, domains)
+        # stay first-class: fold without deprecation noise
+        if seed_backend is not None:
+            cfg = cfg.with_knobs({"serve.seed_backend": seed_backend})
+        if v_cap is not None:
+            cfg = cfg.with_knobs({"atlas.v_cap": v_cap})
+        self.cfg = cfg
         self.index = index
-        self.p = params
+        self.p = cfg.walk
+        v_cap = cfg.atlas.v_cap
+        capacity = cfg.serve.capacity
         n = index.vectors.shape[0]
         if capacity is None:
             self.datlas = index.atlas.to_device(v_cap=v_cap)
@@ -488,6 +509,7 @@ class BatchedEngine:
                 raise ValueError(f"capacity {capacity} < corpus size {n}")
             # widen the row width for the append path's 1.5x graph_k
             # forward edges (mirrors build_sharded_index)
+            graph_k = cfg.graph.graph_k
             adj = np.asarray(index.graph.neighbors, np.int32)
             w = max(adj.shape[1], graph_k + graph_k // 2)
             if w > adj.shape[1]:
@@ -506,7 +528,7 @@ class BatchedEngine:
                     else -1
                 v_cap = auto_v_cap(vmax)
             self._state = InsertState(shards=[slab], v_cap=v_cap,
-                                      graph_k=graph_k, alpha=alpha,
+                                      graph_k=graph_k, alpha=cfg.graph.alpha,
                                       seed=0, next_gid=n)
             self._refresh_from_slab(v_cap)
         # per-field domains for Not/Range lowering in FilterExpr queries;
@@ -515,38 +537,60 @@ class BatchedEngine:
         self.vocab_sizes = (tuple(int(v) for v in vocab_sizes)
                             if vocab_sizes is not None
                             else index.vocab_sizes())
-        self._init_programs(seed_backend)
+        self._init_programs(cfg.serve.seed_backend)
 
     @classmethod
-    def from_state(cls, state, params: BatchedParams = BatchedParams(),
-                   seed_backend: str = "topk",
-                   vocab_sizes=None) -> "BatchedEngine":
+    def from_state(cls, state, config=None, seed_backend: str | None = None,
+                   vocab_sizes=None,
+                   params: BatchedParams | None = None) -> "BatchedEngine":
         """Reconstruct a live capacity-slab engine from a restored
         ``InsertState`` (DESIGN.md §10) with ZERO graph/atlas rebuild: the
         slab already carries the patched adjacency and the incremental
         atlas, so everything derived (device atlas CSR, validity bitmap,
         the sequential-path FiberIndex view) is re-*emitted*, never
-        re-built. Further ``insert_batch`` calls continue seamlessly."""
+        re-built. Further ``insert_batch`` calls continue seamlessly.
+
+        An explicit full ``FnsConfig`` is validated against the state's
+        shape-baked knobs (``ConfigMismatch`` on disagreement — e.g. a
+        snapshot built at graph_k=16 cannot restore under graph_k=32)."""
         from repro.core.batched.insert import emit_anchor_atlas, emit_graph
 
         if len(state.shards) != 1:
             raise ValueError(
                 f"BatchedEngine.from_state needs a 1-shard state, got "
                 f"{len(state.shards)} shards (use ShardedEngine)")
+        if config is None:
+            config = params
+        cfg = coerce_config(config, {}, where="BatchedEngine.from_state")
+        if isinstance(config, FnsConfig):
+            check_state_config(
+                cfg, graph_k=state.graph_k, v_cap=state.v_cap,
+                n_clusters=state.shards[0].atlas.n_clusters,
+                capacity=sum(sh.cap for sh in state.shards),
+                where="BatchedEngine.from_state")
+        else:
+            # fold the restored state's baked values so self.cfg reports
+            # the truth even for legacy callers
+            cfg = cfg.with_knobs({"graph.graph_k": state.graph_k,
+                                  "graph.alpha": state.alpha,
+                                  "atlas.v_cap": state.v_cap})
+        if seed_backend is not None:
+            cfg = cfg.with_knobs({"serve.seed_backend": seed_backend})
         slab = state.shards[0]
         eng = cls.__new__(cls)
+        eng.cfg = cfg
         eng.index = FiberIndex(
             slab.vectors[: slab.n_valid].copy(),
             slab.metadata[: slab.n_valid].copy(),
             emit_graph(slab), emit_anchor_atlas(slab))
-        eng.p = params
+        eng.p = cfg.walk
         eng._state = state
         eng._refresh_from_slab(state.v_cap)
         eng.vocab_sizes = (tuple(int(v) for v in vocab_sizes)
                            if vocab_sizes is not None
                            else eng.index.vocab_sizes())
         eng.index.extend_vocab(eng.vocab_sizes)
-        eng._init_programs(seed_backend)
+        eng._init_programs(cfg.serve.seed_backend)
         return eng
 
     def _refresh_from_slab(self, v_cap: int) -> None:
@@ -563,16 +607,17 @@ class BatchedEngine:
 
     def _init_programs(self, seed_backend: str) -> None:
         params = self.p
+        kcfg = self.cfg.kernel
         on_cpu = jax.default_backend() == "cpu"  # donation unsupported there
         self._round = jax.jit(
             functools.partial(atlas_round, p=params,
-                              seed_backend=seed_backend),
+                              seed_backend=seed_backend, kcfg=kcfg),
             donate_argnums=() if on_cpu else (8, 9, 10, 11))
         self._search = jax.jit(
             functools.partial(search_batch, p=params,
-                              seed_backend=seed_backend),
+                              seed_backend=seed_backend, kcfg=kcfg),
             donate_argnums=() if on_cpu else (4, 5, 6))
-        self._passes = jax.jit(_eval_passes)
+        self._passes = jax.jit(functools.partial(_eval_passes, kcfg=kcfg))
         self.dispatches = 0
 
     def insert_batch(self, vectors, metadata) -> np.ndarray:

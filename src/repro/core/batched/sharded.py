@@ -37,6 +37,7 @@ from repro.core.atlas import AnchorAtlas
 from repro.core.batched.bitmap import pack_bits
 from repro.core.batched.engine import (INF, BatchedParams, pack_query_batch,
                                        search_batch)
+from repro.core.config import FnsConfig, coerce_config
 from repro.core.batched.insert import (InsertState, emit_device_atlas,
                                        insert_rows, make_shard_state)
 from repro.core.device_atlas import (DeviceAtlas, auto_v_cap,
@@ -84,11 +85,13 @@ class ShardedIndex:
 
 
 def build_sharded_index(vectors: np.ndarray, metadata: np.ndarray,
-                        n_shards: int, *, graph_k: int = 32,
-                        r_max: int = 96, alpha: float = 1.2,
+                        n_shards: int, *, config: FnsConfig | None = None,
+                        graph_k: int | None = None,
+                        r_max: int | None = None,
+                        alpha: float | None = None,
                         n_clusters: int | None = None,
                         v_cap: int | None = None,
-                        seed: int = 0,
+                        seed: int | None = None,
                         capacity: int | None = None) -> ShardedIndex:
     """Partition a corpus into ``n_shards`` row blocks and build each
     shard's subgraph + atlas. All shards share one n_clusters and one v_cap
@@ -100,7 +103,20 @@ def build_sharded_index(vectors: np.ndarray, metadata: np.ndarray,
     ceil(capacity / S) and the spare rows are capacity-slab slots that
     ``ShardedEngine.insert_batch`` fills later — identical shapes, so
     growing the corpus never recompiles the search program. Without it,
-    m = ceil(n / S) and inserts fail on capacity."""
+    m = ceil(n / S) and inserts fail on capacity.
+
+    All knobs come from ``config`` (one ``FnsConfig``); the loose kwargs
+    are deprecation shims that fold into it, warning once."""
+    cfg = coerce_config(config,
+                        {"graph.graph_k": graph_k, "graph.r_max": r_max,
+                         "graph.alpha": alpha, "atlas.n_clusters": n_clusters,
+                         "atlas.v_cap": v_cap, "serve.capacity": capacity},
+                        where="build_sharded_index")
+    if seed is not None:  # plumbing arg, folds silently
+        cfg = cfg.with_knobs({"atlas.kmeans_seed": seed})
+    graph_k, alpha = cfg.graph.graph_k, cfg.graph.alpha
+    n_clusters, v_cap = cfg.atlas.n_clusters, cfg.atlas.v_cap
+    seed, capacity = cfg.atlas.kmeans_seed, cfg.serve.capacity
     vectors = np.asarray(vectors, np.float32)
     metadata = np.asarray(metadata, np.int32)
     n, d = vectors.shape
@@ -108,7 +124,8 @@ def build_sharded_index(vectors: np.ndarray, metadata: np.ndarray,
     if capacity is not None and capacity < n:
         raise ValueError(f"capacity {capacity} < corpus size {n}")
     graphs, bounds = build_shard_graphs(vectors, n_shards, k=graph_k,
-                                        r_max=r_max, alpha=alpha)
+                                        r_max=cfg.graph.r_max, alpha=alpha,
+                                        block=cfg.graph.build_block)
     m = -(-max(n, capacity or 0) // n_shards)
     min_real = min(hi - lo for lo, hi in bounds)
     if n_clusters is None:
@@ -194,16 +211,22 @@ class ShardedEngine:
     invocations so tests can assert the one-dispatch property.
     """
 
-    def __init__(self, sindex: ShardedIndex, mesh,
-                 params: BatchedParams = BatchedParams(),
-                 seed_backend: str = "topk", axis: str = "data"):
+    def __init__(self, sindex: ShardedIndex, mesh, config=None,
+                 seed_backend: str | None = None, axis: str = "data",
+                 params: BatchedParams | None = None):
         s = sindex.n_shards
         if mesh is not None and index_axis_size(mesh, axis) != s:
             raise ValueError(
                 f"index has {s} shards but mesh axis {axis!r} spans "
                 f"{index_axis_size(mesh, axis)} devices")
-        self.mesh, self.axis, self.p = mesh, axis, params
-        self._seed_backend = seed_backend
+        if config is None:
+            config = params
+        cfg = coerce_config(config, {}, where="ShardedEngine")
+        if seed_backend is not None:
+            cfg = cfg.with_knobs({"serve.seed_backend": seed_backend})
+        self.cfg = cfg
+        self.mesh, self.axis, self.p = mesh, axis, cfg.walk
+        self._seed_backend = cfg.serve.seed_backend
         self._istate = sindex.insert_state
         if mesh is not None:
             sh = index_shardings(mesh, axis)
@@ -231,12 +254,14 @@ class ShardedEngine:
         self._search_iv = None  # built lazily on the first interval query
         self._ref = jax.jit(
             lambda datlas, vec, adj, meta, vbm, qv, f, a, b: search_batch(
-                datlas, vec, adj, meta, qv, f, a, params, seed_backend,
-                valid_bm=vbm, bounds=b))
+                datlas, vec, adj, meta, qv, f, a, cfg.walk,
+                cfg.serve.seed_backend, valid_bm=vbm, bounds=b,
+                kcfg=cfg.kernel))
         self.dispatches = 0
 
     def _build_program(self, has_bounds: bool):
         axis, p, sb = self.axis, self.p, self._seed_backend
+        kcfg = self.cfg.kernel
         nl, tdef = len(self._leaves), self._tdef
 
         def fn(*args):
@@ -248,7 +273,8 @@ class ShardedEngine:
                 tdef, [l[0] for l in leaves])
             out = search_batch(datlas, vectors[0], adjacency[0], metadata[0],
                                q_vecs, fields, allowed, p, sb,
-                               valid_bm=valid_bm[0], bounds=bounds)
+                               valid_bm=valid_bm[0], bounds=bounds,
+                               kcfg=kcfg)
             gids = jnp.where(out["res_i"] >= 0,
                              global_ids[0][jnp.maximum(out["res_i"], 0)], -1)
             all_v = jax.lax.all_gather(out["res_v"], axis)

@@ -33,6 +33,7 @@ import numpy as np
 
 from repro.core.batched.bitmap import pack_bits
 from repro.core.batched.bitmap import n_words as _n_words
+from repro.core.config import AtlasConfig, KernelConfig
 from repro.core.predicate import Interval
 # sentinel + device-side count derivation live with the kernels that
 # consume the tables; re-exported here next to the packers that emit them
@@ -40,14 +41,16 @@ from repro.kernels.filter_eval import DEAD_DISJUNCT, table_n_disj
 from repro.kernels.ops import V_CAP
 
 NEG = jnp.float32(-3.4e38)
-MEMBER_CAP = 4096  # mirrors AnchorAtlas.cluster_members_matching's cap
+_ACFG = AtlasConfig()
+# mirrors AnchorAtlas.cluster_members_matching's cap
+MEMBER_CAP = _ACFG.member_cap
 
 # ceiling on the *auto-sized* value-bitmap width: beyond this, per-value
 # presence bitmaps would scale device memory with the vocabulary (the very
 # blow-up interval clauses exist to avoid), so codes past the cap are
 # tracked only by the per-cluster [code_min, code_max] envelope and served
 # by interval clauses. An explicit v_cap still sizes exactly as asked.
-AUTO_V_CAP_MAX = 1024
+AUTO_V_CAP_MAX = _ACFG.auto_v_cap_max
 
 INT32_MAX = np.int32(2**31 - 1)
 
@@ -322,6 +325,7 @@ class DeviceAtlas:
         processed: jax.Array, vectors: jax.Array, passes: jax.Array, *,
         n_seeds: int = 10, c_max: int = 5, member_cap: int = MEMBER_CAP,
         backend: str = "sort", disjunct_quota: int = 2,
+        kcfg: KernelConfig | None = None,
     ) -> tuple[jax.Array, jax.Array]:
         """One anchor-selection round for Q queries (Alg. 2 lines 3–14,
         batched). Exact host semantics: rank matching unprocessed clusters
@@ -393,7 +397,7 @@ class DeviceAtlas:
         elif backend == "topk":
             seeds = self._seed_by_topk(q_vecs, vectors, sims, elig, order,
                                        cnt_r, visited_r, yld_r, n_seeds,
-                                       c_max)
+                                       c_max, kcfg=kcfg)
         else:
             raise ValueError(f"unknown seed backend {backend!r}")
         if dmasks is not None and disjunct_quota > 0:
@@ -486,7 +490,8 @@ class DeviceAtlas:
         return jnp.where(k1s[:, :n_seeds] < k, ids[:, :n_seeds], -1)
 
     def _seed_by_topk(self, q_vecs, vectors, sims, elig, order, cnt_r,
-                      visited_r, yld_r, n_seeds: int, c_max: int):
+                      visited_r, yld_r, n_seeds: int, c_max: int,
+                      kcfg: KernelConfig | None = None):
         """Quota fill via masked cosine top-k: one top-k per
         yielding-cluster slot (≤ c_max) over the corpus with the filter
         bitmap restricted to that slot's cluster. On TPU each slot is a
@@ -511,8 +516,10 @@ class DeviceAtlas:
             if on_tpu:
                 from repro.kernels.masked_cosine_topk import \
                     masked_cosine_topk
+                kc = kcfg or KernelConfig()
                 _, ids_j = masked_cosine_topk(q_vecs, vectors,
                                               pack_bitmap(mask), k=n_seeds,
+                                              qt=kc.topk_qt, nt=kc.topk_nt,
                                               interpret=False)
             else:
                 s_j, ids_j = jax.lax.top_k(

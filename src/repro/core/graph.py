@@ -106,8 +106,16 @@ def _alpha_rng_prune(i: int, nbrs: np.ndarray, vectors: np.ndarray,
 
 
 def build_alpha_knn(vectors: np.ndarray, k: int = 32, r_max: int = 128,
-                    alpha: float = 1.2, block: int = 2048) -> Graph:
-    """Full Algorithm 1. ``r_max`` caps only over-degree nodes."""
+                    alpha: float = 1.2, block: int = 2048, *,
+                    config=None) -> Graph:
+    """Full Algorithm 1. ``r_max`` caps only over-degree nodes.
+
+    ``config`` (a ``GraphConfig`` or full ``FnsConfig``) supplies every
+    knob when given; the loose kwargs remain for direct callers (this is
+    a leaf builder — the engines thread their ``FnsConfig`` through)."""
+    if config is not None:
+        g = getattr(config, "graph", config)
+        k, r_max, alpha, block = g.graph_k, g.r_max, g.alpha, g.build_block
     knn = brute_knn(vectors, k, block=block)                 # Stage 1
     adj = _symmetrize(knn)                                   # Stage 2
     for i in range(len(adj)):                                # Stage 3

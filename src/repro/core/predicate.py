@@ -40,9 +40,11 @@ from typing import Iterable, NamedTuple, Sequence
 
 import numpy as np
 
+from repro.core.config import AtlasConfig, KernelConfig
+
 # fallback per-field domain for Not/Range when no vocab_sizes is given;
 # matches the kernels' default value-bitmap capacity (kernels.ops.V_CAP)
-DEFAULT_DOMAIN = 256
+DEFAULT_DOMAIN = AtlasConfig().v_cap_min
 
 
 class Interval(NamedTuple):
@@ -63,9 +65,10 @@ class Interval(NamedTuple):
 
 # bound on the disjunctive blow-up: And-over-Or distribution is cut off
 # (ValueError) once a (sub)expression needs more conjunctive clause tables
-# than this. 8 keeps the device tables one power-of-two wider than the
-# common or2/or4 serving shapes while capping worst-case kernel work.
-MAX_DISJUNCTS = 8
+# than this. The default (KernelConfig.max_disjuncts = 8) keeps the device
+# tables one power-of-two wider than the common or2/or4 serving shapes
+# while capping worst-case kernel work.
+MAX_DISJUNCTS = KernelConfig().max_disjuncts
 
 Clauses = tuple  # tuple[(field, (values...)), ...] — FilterPredicate shape
 

@@ -35,6 +35,17 @@ def table_n_disj(fields: jax.Array) -> jax.Array:
     return jnp.sum(fields[:, :, 0] > DEAD_DISJUNCT, axis=1).astype(jnp.int32)
 
 
+def _check_tile(tn: int) -> None:
+    # the pass bools pack into uint32 words via ok.reshape(tn//32, 32), so
+    # the corpus tile must be a positive multiple of 32; tn is static under
+    # jit, so this fires at trace time with the knob's name instead of a
+    # cryptic reshape error mid-kernel
+    if tn <= 0 or tn % 32 != 0:
+        raise ValueError(
+            f"KernelConfig.filter_tile (tn) must be a positive multiple of "
+            f"32 for the bitmap pack; got {tn}")
+
+
 def _kernel(meta_ref, fields_ref, allowed_ref, out_ref, *, n_clauses: int,
             v_cap: int):
     meta = meta_ref[...]                       # (Tn, F) int32
@@ -181,6 +192,7 @@ def filter_eval_batch(metadata, fields, allowed, n_disj=None, bounds=None, *,
     bytes); the grid is (corpus tiles, Q). Pad bits beyond n are forced to
     0 so the output matches ``ref.filter_eval_batch`` bit-exactly even for
     unconstrained predicates."""
+    _check_tile(tn)
     n, F = metadata.shape
     q_n = fields.shape[0]
     v_cap = allowed.shape[-1] * 32
@@ -265,6 +277,7 @@ def filter_eval(metadata, fields, allowed, *, tn: int = 1024,
                 interpret: bool = True):
     """metadata (n, F) i32; fields (C,) i32 (-1 inactive);
     allowed (C, V_cap) uint8 -> (ceil(n/32),) uint32."""
+    _check_tile(tn)
     n, F = metadata.shape
     C, v_cap = allowed.shape
     n_pad = (-n) % tn

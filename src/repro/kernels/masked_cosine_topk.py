@@ -62,6 +62,16 @@ def masked_cosine_topk(queries, corpus, bitmap, *, k: int = 32,
                        qt: int = 8, nt: int = 512, interpret: bool = True):
     """queries (Q, d), corpus (n, d), bitmap (Q, ceil(n/32)) uint32 ->
     (sims (Q, k) f32 desc, ids (Q, k) i32, -1 when unfilled)."""
+    # the kernel unpacks the filter bitmap as (Qt, nt//32) words and the
+    # query tile must be positive; both are static under jit, so validate
+    # at trace time with the knob names instead of a mid-kernel shape error
+    if nt <= 0 or nt % 32 != 0:
+        raise ValueError(
+            f"KernelConfig.topk_nt (nt) must be a positive multiple of 32 "
+            f"for the bitmap word unpack; got {nt}")
+    if qt <= 0:
+        raise ValueError(f"KernelConfig.topk_qt (qt) must be positive; "
+                         f"got {qt}")
     q, d = queries.shape
     n = corpus.shape[0]
     qt = min(qt, q)

@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.config import AtlasConfig, KernelConfig
 from repro.kernels.fiber_expand import fiber_expand as _fiber_expand
 from repro.kernels.fiber_expand import fiber_expand_walk as _fiber_expand_walk
 from repro.kernels.filter_eval import filter_eval as _filter_eval
@@ -18,16 +19,19 @@ from repro.kernels.filter_eval import filter_eval_batch as _filter_eval_batch
 from repro.kernels.masked_cosine_topk import \
     masked_cosine_topk as _masked_cosine_topk
 
-MAX_CLAUSES = 4
-V_CAP = 256
+# legacy module-level names, derived from the one config origin
+# (core/config.py); kept as importable aliases for existing callers
+_KCFG = KernelConfig()
+MAX_CLAUSES = _KCFG.max_clauses
+V_CAP = AtlasConfig().v_cap_min
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def masked_cosine_topk(queries, corpus, bitmap, *, k: int = 32, qt: int = 8,
-                       nt: int = 512):
+def masked_cosine_topk(queries, corpus, bitmap, *, k: int = 32,
+                       qt: int = _KCFG.topk_qt, nt: int = _KCFG.topk_nt):
     return _masked_cosine_topk(queries, corpus, bitmap, k=k, qt=qt, nt=nt,
                                interpret=_interpret())
 
@@ -42,13 +46,13 @@ def fiber_expand_walk(q_vecs, corpus, ids, bitmap):
                               interpret=_interpret())
 
 
-def filter_eval(metadata, fields, allowed, *, tn: int = 1024):
+def filter_eval(metadata, fields, allowed, *, tn: int = _KCFG.filter_tile):
     return _filter_eval(metadata, fields, allowed, tn=tn,
                         interpret=_interpret())
 
 
 def filter_eval_batch(metadata, fields, allowed, n_disj=None, bounds=None, *,
-                      tn: int = 1024):
+                      tn: int = _KCFG.filter_tile):
     return _filter_eval_batch(metadata, fields, allowed, n_disj, bounds,
                               tn=tn, interpret=_interpret())
 

@@ -54,6 +54,7 @@ from repro.core.batched.engine import BatchedEngine, BatchedParams
 from repro.core.batched.insert import (HostAtlas, InsertParams, InsertState,
                                        ShardState)
 from repro.core.batched.sharded import ShardedEngine, index_from_state
+from repro.core.config import FnsConfig, check_state_config
 from repro.launch.mesh import index_axis_size
 
 FORMAT = 1
@@ -252,9 +253,9 @@ def pad_state(state: InsertState, n_shards: int) -> InsertState:
     return state
 
 
-def engine_from_state(state: InsertState, *, mesh=None,
-                      params: BatchedParams = BatchedParams(),
-                      seed_backend: str = "topk", vocab_sizes=None):
+def engine_from_state(state: InsertState, *, mesh=None, config=None,
+                      params: BatchedParams | None = None,
+                      seed_backend: str | None = None, vocab_sizes=None):
     """Reconstruct a live engine from a restored state on whatever mesh
     this process has — zero graph/atlas rebuild on every path:
 
@@ -267,19 +268,34 @@ def engine_from_state(state: InsertState, *, mesh=None,
       ``BatchedEngine``; a multi-shard state runs in ``ShardedEngine``'s
       reference mode (bit-identical shard-at-a-time execution on the
       default device — restoring a 4-shard snapshot on 1 device keeps the
-      4-shard search semantics, and with them the recall profile)."""
+      4-shard search semantics, and with them the recall profile).
+
+    ``config`` (an ``FnsConfig``) is the one knob source; when given, its
+    shape-baked knobs are validated against the state (``ConfigMismatch``
+    on conflict — graph_k/v_cap/capacity are baked into the slabs and
+    cannot be changed by a restore). The legacy ``params``/
+    ``seed_backend`` kwargs remain as deprecation shims (folded by the
+    engine constructors, which warn once)."""
+    if isinstance(config, FnsConfig):
+        check_state_config(
+            config, graph_k=state.graph_k, v_cap=state.v_cap,
+            n_clusters=state.shards[0].atlas.n_clusters,
+            capacity=sum(sh.cap for sh in state.shards),
+            where="engine_from_state")
+    eff = config if config is not None else params
     s = len(state.shards)
     target = index_axis_size(mesh) if mesh is not None else 1
     if mesh is not None and target >= s:
         if target > s:
             pad_state(state, target)
         return ShardedEngine(index_from_state(state, vocab_sizes=vocab_sizes),
-                             mesh, params, seed_backend)
+                             mesh, config=eff, seed_backend=seed_backend)
     if s == 1:
-        return BatchedEngine.from_state(state, params, seed_backend,
+        return BatchedEngine.from_state(state, config=eff,
+                                        seed_backend=seed_backend,
                                         vocab_sizes=vocab_sizes)
     return ShardedEngine(index_from_state(state, vocab_sizes=vocab_sizes),
-                         None, params, seed_backend)
+                         None, config=eff, seed_backend=seed_backend)
 
 
 # -- the store: snapshots dir + journal under one root ----------------------
@@ -308,8 +324,11 @@ class DurableStore:
         before the rename leaves the previous snapshot + intact journal —
         recovery is unaffected."""
         step = state.applied_seq
+        cfg = (extra or {}).get("config")
+        meta = ({"config_fingerprint": cfg.get("fingerprint"),
+                 "config": cfg.get("knobs")} if cfg else None)
         ckpt.save(self.snap_dir, step, state_to_tree(state, extra),
-                  keep=self.keep)
+                  keep=self.keep, meta=meta)
         self.journal.truncate()
         return step
 

@@ -17,6 +17,8 @@ from repro.core.atlas import AnchorAtlas
 from repro.core.batched.engine import (BatchedEngine, BatchedParams,
                                        _compile_query_dnf)
 from repro.core.batched.sharded import ShardedEngine, build_sharded_index
+from repro.core.config import (AtlasConfig, FnsConfig, GraphConfig,
+                               ServeConfig, coerce_config)
 from repro.core.graph import build_alpha_knn
 from repro.core.predicate import FilterExpr
 from repro.core.search import FiberIndex, SearchParams, search
@@ -26,14 +28,24 @@ from repro.models.transformer import ShardEnv, encode
 
 # singleton (and any sub-minimum) arrivals pad up to this bucket so a
 # serving process reuses the smallest bucket's compiled program instead of
-# compiling a dedicated tiny one per arrival shape
-MIN_BUCKET = 4
+# compiling a dedicated tiny one per arrival shape (value originates in
+# core/config.py; this alias keeps the historical import working)
+MIN_BUCKET = ServeConfig().min_bucket
 
-# single source of the index-build knobs: build() seeds graph_build from
-# these, and the lazy global/sharded builders merge them back in so a
-# hand-constructed service (empty graph_build) gets the same values
-GRAPH_BUILD_DEFAULTS = {"graph_k": 32, "r_max": 96, "alpha": 1.2,
-                        "n_clusters": None}
+# legacy view of the index-build knobs (now sourced from the config tree):
+# build() seeds graph_build from these, and the lazy global/sharded
+# builders merge them back in so a hand-constructed service (empty
+# graph_build) gets the same values
+_GCFG = GraphConfig()
+GRAPH_BUILD_DEFAULTS = {"graph_k": _GCFG.graph_k, "r_max": _GCFG.r_max,
+                        "alpha": _GCFG.alpha,
+                        "n_clusters": AtlasConfig().n_clusters}
+
+# SearchParams fields shared verbatim with the lockstep walk config —
+# beam_width is deliberately excluded (40 is the sequential beam's tuning,
+# 4 the lockstep default; see RetrievalService.engine)
+_SHARED_WALK_FIELDS = ("k", "jump_budget", "n_seeds", "c_max",
+                       "frontier_width", "stall_budget", "max_hops")
 
 
 def _engine_state(eng):
@@ -53,6 +65,9 @@ class RetrievalService:
     # row capacity the batched/sharded engines reserve for ``ingest``
     # (DESIGN.md §9); None = build-once service, ingest raises
     capacity: int | None = None
+    # the one typed knob tree every engine this service builds consumes
+    # (DESIGN.md §11); None = derive lazily from the legacy fields above
+    config: FnsConfig | None = None
     _ds: Dataset | None = dataclasses.field(default=None, repr=False)
     _engine: BatchedEngine | None = dataclasses.field(default=None,
                                                       repr=False)
@@ -64,16 +79,37 @@ class RetrievalService:
     _next_seq: int = dataclasses.field(default=1, repr=False)
 
     @staticmethod
-    def build(ds: Dataset, *, graph_k: int = GRAPH_BUILD_DEFAULTS["graph_k"],
-              r_max: int = GRAPH_BUILD_DEFAULTS["r_max"],
-              alpha: float = GRAPH_BUILD_DEFAULTS["alpha"],
-              n_clusters: int | None = None,
-              params: SearchParams = SearchParams(),
+    def build(ds: Dataset, *, config: FnsConfig | None = None,
+              graph_k: int | None = None, r_max: int | None = None,
+              alpha: float | None = None, n_clusters: int | None = None,
+              params: SearchParams | None = None,
               mesh=None, capacity: int | None = None) -> "RetrievalService":
+        """Build a service from one ``FnsConfig`` (``config=``); the loose
+        build kwargs are deprecation shims folding into it. ``params``
+        (sequential-path SearchParams) stays first-class: its walk-shared
+        fields fold into ``config.walk`` so bench and serving measure the
+        same engine — unless a full ``FnsConfig`` is given, which wins for
+        the batched engines while ``params`` keeps steering the sequential
+        path."""
+        cfg = coerce_config(config,
+                            {"graph.graph_k": graph_k,
+                             "graph.r_max": r_max,
+                             "graph.alpha": alpha,
+                             "atlas.n_clusters": n_clusters,
+                             "serve.capacity": capacity},
+                            where="RetrievalService.build")
+        if params is not None and not isinstance(config, FnsConfig):
+            cfg = cfg.with_knobs({f"walk.{f}": getattr(params, f)
+                                  for f in _SHARED_WALK_FIELDS})
+        sp = params if params is not None else SearchParams(
+            **{f: getattr(cfg.walk, f) for f in _SHARED_WALK_FIELDS})
         svc = RetrievalService(
-            None, params, mesh=mesh, capacity=capacity, _ds=ds,
-            graph_build={"graph_k": graph_k, "r_max": r_max, "alpha": alpha,
-                         "n_clusters": n_clusters})
+            None, sp, mesh=mesh, capacity=cfg.serve.capacity, config=cfg,
+            _ds=ds,
+            graph_build={"graph_k": cfg.graph.graph_k,
+                         "r_max": cfg.graph.r_max,
+                         "alpha": cfg.graph.alpha,
+                         "n_clusters": cfg.atlas.n_clusters})
         # a mesh-sharded service uses per-shard graphs/atlases only: defer
         # the global build so it isn't paid (time + an (n, R) adjacency
         # held for nothing) unless the sequential path is actually used
@@ -94,7 +130,28 @@ class RetrievalService:
         return self.index
 
     def _gb(self) -> dict:
+        if self.config is not None:
+            return {"graph_k": self.config.graph.graph_k,
+                    "r_max": self.config.graph.r_max,
+                    "alpha": self.config.graph.alpha,
+                    "n_clusters": self.config.atlas.n_clusters}
         return {**GRAPH_BUILD_DEFAULTS, **self.graph_build}
+
+    def _cfg(self) -> FnsConfig:
+        """The service's one FnsConfig. Hand-constructed services (direct
+        dataclass construction with legacy fields) derive it once from
+        graph_build / params / capacity; ``build()`` always sets it."""
+        if self.config is None:
+            gb = {**GRAPH_BUILD_DEFAULTS, **self.graph_build}
+            self.config = FnsConfig().with_knobs({
+                "graph.graph_k": gb["graph_k"],
+                "graph.r_max": gb["r_max"],
+                "graph.alpha": gb["alpha"],
+                "atlas.n_clusters": gb["n_clusters"],
+                "serve.capacity": self.capacity,
+                **{f"walk.{f}": getattr(self.params, f)
+                   for f in _SHARED_WALK_FIELDS}})
+        return self.config
 
     def _corpus(self) -> tuple[np.ndarray, np.ndarray]:
         if self._ds is not None:
@@ -119,11 +176,8 @@ class RetrievalService:
         BatchedEngine for custom lockstep beams."""
         if self._engine is None:
             self._engine = BatchedEngine(self._global_index(),
-                                         self._batched_params(),
-                                         vocab_sizes=self._vocab_sizes(),
-                                         capacity=self.capacity,
-                                         graph_k=self._gb()["graph_k"],
-                                         alpha=self._gb()["alpha"])
+                                         config=self._cfg(),
+                                         vocab_sizes=self._vocab_sizes())
         return self._engine
 
     def _vocab_sizes(self):
@@ -133,11 +187,10 @@ class RetrievalService:
         return self._ds.vocab_sizes if self._ds is not None else None
 
     def _batched_params(self) -> BatchedParams:
-        p = self.params
-        return BatchedParams(
-            k=p.k, jump_budget=p.jump_budget, n_seeds=p.n_seeds,
-            c_max=p.c_max, frontier_width=p.frontier_width,
-            stall_budget=p.stall_budget, max_hops=p.max_hops)
+        # the single walk-param origin (stale-duplication fix): serving's
+        # lockstep walk knobs ARE the config tree's walk section — the same
+        # object the benchmarks construct engines from
+        return self._cfg().walk
 
     def _mesh_shards(self) -> int:
         return index_axis_size(self.mesh) if self.mesh is not None else 1
@@ -159,14 +212,12 @@ class RetrievalService:
         subgraphs/atlases; the per-shard graph builds are each ~S² cheaper
         than the global one."""
         if self._sharded is None:
-            gb = self._gb()
             vectors, metadata = self._corpus()
-            sidx = build_sharded_index(
-                vectors, metadata, self._mesh_shards(),
-                graph_k=gb["graph_k"], r_max=gb["r_max"], alpha=gb["alpha"],
-                n_clusters=gb["n_clusters"], capacity=self.capacity)
+            sidx = build_sharded_index(vectors, metadata,
+                                       self._mesh_shards(),
+                                       config=self._cfg())
             self._sharded = ShardedEngine(sidx, self.mesh,
-                                          self._batched_params())
+                                          config=self._cfg())
         return self._sharded
 
     def query_batch(self, vectors: np.ndarray,
@@ -323,9 +374,15 @@ class RetrievalService:
             raise ValueError("no durability store attached; call "
                              "enable_durability(path) first")
         eng = self._live_engine()
+        cfg = self._cfg()
         extra = {"search_params": dataclasses.asdict(self.params),
                  "graph_build": self._gb(),
                  "capacity": self.capacity,
+                 # full knob provenance: restore reconstructs the exact
+                 # config, and the checkpoint manifest records the
+                 # fingerprint so two snapshots are comparable at a glance
+                 "config": {"fingerprint": cfg.fingerprint(),
+                            "knobs": cfg.flatten()},
                  "vocab_sizes": (list(eng.vocab_sizes)
                                  if eng.vocab_sizes is not None else None)}
         return self._store.snapshot(_engine_state(eng), extra)
@@ -333,6 +390,7 @@ class RetrievalService:
     @classmethod
     def recover(cls, path: str, *, mesh=None,
                 params: SearchParams | None = None,
+                config: FnsConfig | None = None,
                 replay: bool = True) -> "RetrievalService":
         """Bring a service back from its durability root: load the latest
         *readable* snapshot, reconstruct the engine for THIS process's
@@ -340,20 +398,31 @@ class RetrievalService:
         padding / reference mode), replay the journal suffix
         (``seq > applied_seq``, idempotent) through the normal insert
         path, truncate any torn tail, and serve. Corrupted journal or
-        snapshot bytes raise a clean error — they are never served."""
+        snapshot bytes raise a clean error — they are never served.
+
+        The snapshot's recorded config is reconstructed and reused; an
+        explicit ``config`` overrides it and is validated against the
+        state's shape-baked knobs (``ConfigMismatch`` when e.g. graph_k
+        disagrees — those require a rebuild, not a restore). Snapshots
+        from before the config layer (no recorded config) restore through
+        the legacy fields unchanged."""
         from repro.serve.durability import DurableStore, engine_from_state
 
         store = DurableStore(path)
         state, extra, _step = store.load_latest()
         sp = params if params is not None else SearchParams(
             **extra["search_params"])
+        stored = extra.get("config")
+        cfg = config if config is not None else (
+            FnsConfig.from_flat(stored["knobs"]) if stored else None)
         svc = cls(None, sp, mesh=mesh,
                   graph_build=dict(extra.get("graph_build") or {}),
-                  capacity=extra.get("capacity"))
+                  capacity=extra.get("capacity"), config=cfg)
         vocab = (tuple(extra["vocab_sizes"])
                  if extra.get("vocab_sizes") else None)
-        eng = engine_from_state(state, mesh=mesh,
-                                params=svc._batched_params(),
+        eng = engine_from_state(state, mesh=mesh, config=cfg,
+                                params=(svc._batched_params()
+                                        if cfg is None else None),
                                 vocab_sizes=vocab)
         if isinstance(eng, BatchedEngine):
             svc._engine = eng
@@ -374,11 +443,13 @@ class RetrievalService:
 
     @classmethod
     def restore(cls, path: str, *, mesh=None,
-                params: SearchParams | None = None) -> "RetrievalService":
+                params: SearchParams | None = None,
+                config: FnsConfig | None = None) -> "RetrievalService":
         """Snapshot-only restore: the service exactly as of the latest
         readable snapshot, journal suffix NOT replayed (sequence numbers
         still advance past it, so later ingests never collide)."""
-        return cls.recover(path, mesh=mesh, params=params, replay=False)
+        return cls.recover(path, mesh=mesh, params=params, config=config,
+                           replay=False)
 
     def staleness(self) -> dict:
         """Ingest/staleness accounting: how much of the serving corpus is

@@ -1,0 +1,82 @@
+"""CI bench-regression gate for the tuned config (DESIGN.md §11).
+
+Replays the tuned walk knobs (``results/tuned_cpu.json``) on the
+smoke-scale ``search_bench`` fixture and compares recall per row against
+the committed baseline (``benchmarks/tuned_smoke_baseline.json``). Fails
+(exit 1) if any ``tuned/*`` row's recall regresses more than
+``TOLERANCE`` below its baseline — i.e. if a code change quietly
+invalidates the tuned operating point the BENCH rows advertise.
+
+Recall only, by design: the smoke fixture is fully seeded and the engine
+deterministic, so recall is bit-stable run-to-run, while latency on a
+shared CI runner is not — gating on p50 here would be flake, and the
+real latency bar (tuned p50 ≤ 1.25× untuned) is enforced where it is
+measured, in the committed BENCH rows.
+
+Run:   PYTHONPATH=src:. python tools/bench_regression.py
+       PYTHONPATH=src:. python tools/bench_regression.py --write-baseline
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+TOLERANCE = 0.02  # recall points a tuned row may drop before CI fails
+BASELINE_PATH = os.path.join("benchmarks", "tuned_smoke_baseline.json")
+
+
+def smoke_tuned_rows(tuned_path: str) -> dict:
+    from benchmarks.search_bench import tuned_search_bench
+    return tuned_search_bench(tuned_path, batch_sizes=(2,),
+                              selectivities=(0.5,), n=600, d=16, k=5,
+                              reps=1, graph_k=8)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--tuned", default=os.path.join("results",
+                                                    "tuned_cpu.json"))
+    ap.add_argument("--baseline", default=BASELINE_PATH)
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="record the current smoke recalls as the baseline")
+    args = ap.parse_args(argv)
+
+    rows = smoke_tuned_rows(args.tuned)
+    recalls = {key: row["recall"] for key, row in rows.items()}
+
+    if args.write_baseline:
+        os.makedirs(os.path.dirname(args.baseline) or ".", exist_ok=True)
+        with open(args.baseline, "w") as f:
+            json.dump({"tolerance": TOLERANCE, "recall": recalls}, f,
+                      indent=1)
+        print(f"wrote baseline {args.baseline}: {recalls}")
+        return 0
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    tol = baseline.get("tolerance", TOLERANCE)
+    failures = []
+    for key, want in baseline["recall"].items():
+        got = recalls.get(key)
+        if got is None:
+            failures.append(f"{key}: row missing from tuned smoke run")
+        elif got < want - tol:
+            failures.append(f"{key}: recall {got:.3f} < baseline "
+                            f"{want:.3f} - {tol}")
+        else:
+            print(f"{key}: recall {got:.3f} (baseline {want:.3f}) OK")
+    if failures:
+        print("bench-regression gate FAILED:")
+        for msg in failures:
+            print("  " + msg)
+        return 1
+    print("bench-regression gate OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
