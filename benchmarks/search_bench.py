@@ -24,9 +24,17 @@ parity gate and a matched categorical-indicator baseline
 (``recall_catbase``) in every row (DESIGN.md §8).
 
 ``insert_bench`` adds dynamic-insert rows (``insert/b<B>``: rows/sec of
-the append path at batch sizes {64, 256, 1024}; ``post_insert/q64/sel0.1``:
-search QPS + recall on the grown index) — the ingest trajectory next to
-the search trajectory it must not degrade (DESIGN.md §9).
+the *acknowledged* append path — deferred-repair hot path since DESIGN.md
+§12, with the drained graph repair timed separately as ``maintenance_ms``
+— at batch sizes {64, 256, 1024}; ``post_insert/q64/sel0.1``: search QPS
++ recall on the grown, fully repaired index) — the ingest trajectory next
+to the search trajectory it must not degrade (DESIGN.md §9).
+
+``lifecycle_bench`` adds document-lifecycle rows (``delete_churn/b512``:
+rows/sec of a 50% delete/re-insert churn with one budgeted maintenance
+step per cycle; ``post_churn/q64/sel0.1``: search QPS + recall after the
+final compaction, over a corpus identical to the never-churned one) —
+the delete trajectory (DESIGN.md §12).
 
 ``--smoke`` (or smoke=True) runs a tiny corpus with 2 queries (fused +
 sharded + disjunctive + insert paths): the CI entrypoint guard, not a
@@ -353,9 +361,20 @@ def insert_bench(batch_sizes=(64, 256, 1024), *, n: int = 8000, d: int = 64,
     (slab writes + reverse-edge graph repair + incremental atlas + device
     refresh). A final ``post_insert/q64/sel0.1`` row re-measures search QPS
     and recall on the grown index, so ingest-induced recall or latency
-    drift shows up next to the static rows it must match."""
+    drift shows up next to the static rows it must match.
+
+    Since the maintenance subsystem (DESIGN.md §12) the ingest hot path
+    runs with ``maintenance.defer_repair``: the acknowledged batch pays
+    slab writes + validity bits + nearest-cluster assignment only, and
+    the graph repair the old inline path charged per-insert is drained by
+    the background loop — timed separately as ``maintenance_ms`` so both
+    halves of the cost stay visible. ``post_insert`` is measured after
+    the drain, so its recall covers the fully repaired graph."""
+    from repro.serve.maintenance import MaintenanceLoop
+
     cfg = bench_config(k=k, graph_k=graph_k,
-                       knobs={"serve.capacity": n})
+                       knobs={"serve.capacity": n,
+                              "maintenance.defer_repair": True})
     ds = make_selectivity_dataset(SELECTIVITIES, n=n, d=d, n_components=24,
                                   seed=seed)
     total_ins = sum(batch_sizes)
@@ -370,6 +389,7 @@ def insert_bench(batch_sizes=(64, 256, 1024), *, n: int = 8000, d: int = 64,
     index = FiberIndex(base.vectors, base.metadata, graph, atlas)
     eng = BatchedEngine(index, config=cfg, vocab_sizes=ds.vocab_sizes)
     out: dict = {}
+    loop = MaintenanceLoop(eng, cfg.maintenance)
     written = base_n
     for b in batch_sizes:
         before = eng.insert_stats
@@ -377,10 +397,14 @@ def insert_bench(batch_sizes=(64, 256, 1024), *, n: int = 8000, d: int = 64,
         eng.insert_batch(ds.vectors[written:written + b],
                          ds.metadata[written:written + b])
         dt = time.time() - t0
+        t1 = time.time()
+        loop.run_until_idle()  # the deferred graph repair, off the clock
+        mnt = time.time() - t1
         written += b
         st = eng.insert_stats  # counters are cumulative: report the delta
         out[f"insert/b{b}"] = {
             "rows_per_s": b / dt, "batch_ms": dt * 1e3,
+            "maintenance_ms": mnt * 1e3,
             "corpus_rows": st["corpus_rows"],
             "reclusters": st["reclusters"] - before["reclusters"],
             "reverse_edge_repairs": (st["reverse_edge_repairs"]
@@ -390,6 +414,71 @@ def insert_bench(batch_sizes=(64, 256, 1024), *, n: int = 8000, d: int = 64,
     row = measure_batch(eng, qs, reps)
     row["dynamic_fraction"] = eng.insert_stats["dynamic_fraction"]
     out[f"post_insert/q{q_post}/sel0.1"] = row
+    return out
+
+
+def lifecycle_bench(*, n: int = 8000, d: int = 64, k: int = 10,
+                    reps: int = 20, graph_k: int = 16, seed: int = 7,
+                    churn_frac: float = 0.5, batch: int = 512,
+                    q_post: int = 64) -> dict:
+    """Document-lifecycle rows (DESIGN.md §12): the full corpus with 25%
+    slab slack is churned — each cycle tombstones ``batch`` random live
+    documents and re-inserts the same documents under their original ids
+    (so ground truth stays exact), with one budgeted maintenance step per
+    cycle, until ``churn_frac`` of the corpus has turned over.
+
+    * ``delete_churn/b<batch>``: rows/sec of the churn loop (each churned
+      row = one delete + one re-insert + its amortized maintenance),
+      plus how many compactions the maintenance loop ran inside it;
+    * ``post_churn/q{q_post}/sel0.1``: search QPS + recall AFTER a final
+      forced compaction — the recovered steady state, next to the static
+      and ``post_insert`` rows it must match (the corpus is by
+      construction identical to the never-churned one)."""
+    from repro.core.batched.lifecycle import compact_state
+    from repro.serve.maintenance import MaintenanceLoop
+
+    cfg = bench_config(k=k, graph_k=graph_k,
+                       knobs={"serve.capacity": n + n // 4,
+                              "maintenance.defer_repair": True})
+    ds = make_selectivity_dataset(SELECTIVITIES, n=n, d=d, n_components=24,
+                                  seed=seed)
+    graph = build_alpha_knn(ds.vectors, config=cfg.graph)
+    atlas = AnchorAtlas.build(ds, seed=cfg.atlas.kmeans_seed)
+    index = FiberIndex(ds.vectors, ds.metadata, graph, atlas)
+    eng = BatchedEngine(index, config=cfg, vocab_sizes=ds.vocab_sizes)
+    loop = MaintenanceLoop(eng, cfg.maintenance)
+    rng = np.random.default_rng(seed)
+    target = int(churn_frac * n)
+    churned = 0
+    cycles = 0
+    t0 = time.time()
+    while churned < target:
+        dead = rng.choice(n, size=batch, replace=False)
+        eng.delete_batch(dead)
+        eng.insert_batch(ds.vectors[dead], ds.metadata[dead], gids=dead)
+        loop.step()  # one budgeted unit per cycle, the serving cadence
+        churned += batch
+        cycles += 1
+    dt = time.time() - t0
+    out: dict = {}
+    st = eng.insert_stats
+    out[f"delete_churn/b{batch}"] = {
+        "rows_per_s": 2 * churned / dt,  # deletes + re-inserts
+        "churned_rows": churned, "cycle_ms": dt * 1e3 / cycles,
+        "compactions": st["compactions"],
+        "maintenance_steps": loop.steps,
+        "repair_backlog_rows": st["repair_backlog_rows"]}
+    t1 = time.time()
+    loop.run_until_idle()
+    compact_state(eng.state, cfg.maintenance, force=True)
+    eng.refresh_device()
+    out[f"delete_churn/b{batch}"]["final_compact_ms"] = \
+        (time.time() - t1) * 1e3
+    qs = make_selectivity_queries(ds, 1, q_post)
+    attach_ground_truth(ds, qs, k=k)
+    row = measure_batch(eng, qs, reps)
+    row["tombstoned_rows"] = eng.insert_stats["tombstoned_rows"]
+    out[f"post_churn/q{q_post}/sel0.1"] = row
     return out
 
 
@@ -517,6 +606,11 @@ def main(smoke: bool = False) -> dict:
         # then search the grown index
         results.update(insert_bench(batch_sizes=(8,), n=600, d=16, k=5,
                                     reps=1, graph_k=8, q_post=2))
+        # and the lifecycle path: delete/re-insert churn + compaction,
+        # then search the recycled index
+        results.update(lifecycle_bench(n=600, d=16, k=5, reps=1,
+                                       graph_k=8, churn_frac=0.1,
+                                       batch=16, q_post=2))
         # and the durability path: journaled ingest -> snapshot ->
         # restore/recover -> search the recovered index
         results.update(durability_bench(n=600, d=16, k=5, reps=1,
@@ -540,6 +634,7 @@ def main(smoke: bool = False) -> dict:
         results.update(or_search_bench())
         results.update(range_search_bench())
         results.update(insert_bench())
+        results.update(lifecycle_bench())
         results.update(durability_bench())
         write_baseline(results)
     return results
@@ -554,7 +649,14 @@ if __name__ == "__main__":
         if name.startswith("insert/"):
             print(f"{name:14s} rows/s={r['rows_per_s']:8.1f} "
                   f"batch={r['batch_ms']:7.1f}ms "
+                  f"maint={r['maintenance_ms']:7.1f}ms "
                   f"repairs={r['reverse_edge_repairs']}")
+            continue
+        if name.startswith("delete_churn/"):
+            print(f"{name:14s} rows/s={r['rows_per_s']:8.1f} "
+                  f"cycle={r['cycle_ms']:7.1f}ms "
+                  f"compactions={r['compactions']} "
+                  f"steps={r['maintenance_steps']}")
             continue
         if name.startswith("durability/"):
             kv = " ".join(f"{k}={v:.1f}" if isinstance(v, float)

@@ -620,19 +620,34 @@ class BatchedEngine:
         self._passes = jax.jit(functools.partial(_eval_passes, kcfg=kcfg))
         self.dispatches = 0
 
-    def insert_batch(self, vectors, metadata) -> np.ndarray:
+    def insert_batch(self, vectors, metadata, *,
+                     gids: np.ndarray | None = None) -> np.ndarray:
         """Append (vector, metadata) rows to the live index: slab writes +
         validity-bit flips, reverse-edge graph repair, and the incremental
         atlas update run on the host mirror, then the device arrays are
-        refreshed at the same shapes (no recompile, no extra search
-        dispatches). Returns the new rows' ids."""
+        refreshed (no extra search dispatches; shapes only change when the
+        slab outgrew its capacity, in which case ``ensure_capacity``
+        compacts/grows first and the jitted program retraces once). With
+        ``maintenance.defer_repair`` the repair half is queued for the
+        maintenance loop instead. ``gids`` re-introduces deleted documents
+        under their old ids (still-live ids are rejected). Returns the new
+        rows' ids."""
         from repro.core.batched.insert import insert_rows
+        from repro.core.batched.lifecycle import ensure_capacity
 
         if self._state is None:
             raise ValueError(
                 "engine was built without spare capacity; construct "
                 "BatchedEngine(..., capacity=...) to enable insert_batch")
-        gids, _ = insert_rows(self._state, vectors, metadata)
+        mcfg = self.cfg.maintenance
+        room = ensure_capacity(self._state, np.asarray(vectors).shape[0],
+                               mcfg)
+        if room["grown"]:
+            # keep the shape-baked knob truthful for snapshot/restore
+            self.cfg = self.cfg.with_knobs(
+                {"serve.capacity": room["new_cap"]})
+        gids, _ = insert_rows(self._state, vectors, metadata, gids=gids,
+                              defer_repair=mcfg.defer_repair)
         self._refresh_from_slab(self.datlas.v_cap)
         self.vocab_sizes = self._state.expand_vocab(self.vocab_sizes)
         # keep the sequential path's memoized domains in sync: Not /
@@ -640,6 +655,37 @@ class BatchedEngine:
         # otherwise silently miss codes first introduced by this ingest
         self.index.extend_vocab(self.vocab_sizes)
         return gids
+
+    def delete_batch(self, gids) -> int:
+        """Tombstone documents by global id (DESIGN.md §12): clear their
+        validity bits on the host mirror and re-place the packed bitmap —
+        the ONLY liveness source the fused search reads — so the cost is
+        one bit-pack + transfer. No recompile, no graph or atlas work (the
+        dead rows keep routing walks until compaction recycles them).
+        Returns the number of rows tombstoned."""
+        from repro.core.batched.lifecycle import delete_rows
+
+        if self._state is None:
+            raise ValueError(
+                "engine was built without spare capacity; deletes need a "
+                "capacity-slab engine (BatchedEngine(..., capacity=...))")
+        n, _ = delete_rows(self._state, gids)
+        self._valid_bm = pack_bits(jnp.asarray(self._state.shards[0].valid))
+        return n
+
+    def refresh_device(self, touched=None) -> None:
+        """Re-place the device arrays from the host slab after host-side
+        maintenance (compaction, growth, deferred repair). The uniform
+        engine hook ``MaintenanceLoop`` publishes through."""
+        del touched  # one shard: a refresh is always full
+        if self._state is not None:
+            self._refresh_from_slab(self.datlas.v_cap)
+
+    @property
+    def state(self):
+        """The host ``InsertState`` mirror (None on a fixed-size engine) —
+        what the lifecycle/maintenance subsystem mutates."""
+        return self._state
 
     @property
     def insert_stats(self) -> dict | None:
@@ -649,6 +695,15 @@ class BatchedEngine:
     def _pack_queries(self, queries: list[Query]):
         return pack_query_batch(queries, v_cap=self.datlas.v_cap,
                                 vocab_sizes=self.vocab_sizes)
+
+    def _to_gids(self, ids: list[np.ndarray]) -> list[np.ndarray]:
+        """Map slab row indices to global ids. Identity until the first
+        compaction moves rows (build + append assign gid == row), so this
+        only matters on an index with a document lifecycle."""
+        if self._state is None:
+            return ids
+        g = self._state.shards[0].global_ids
+        return [g[i] for i in ids]
 
     def search(self, queries: list[Query], seed: int = 0):
         """Filtered top-k for a batch: one device dispatch, one host sync.
@@ -663,7 +718,8 @@ class BatchedEngine:
         self.dispatches += 1
         host = jax.device_get(out)  # the batch's single host sync
         res_v, res_i = host["res_v"], host["res_i"]
-        ids = [res_i[i][res_v[i] < INF / 2] for i in range(Q)]
+        ids = self._to_gids(
+            [res_i[i][res_v[i] < INF / 2] for i in range(Q)])
         stats = {"walks": host["walks"].astype(np.int32),
                  "hops": host["hops"].astype(np.int64)}
         return ids, stats
@@ -705,5 +761,6 @@ class BatchedEngine:
                 break
         res_v = np.asarray(res_v)
         res_i = np.asarray(res_i)
-        ids = [res_i[i][res_v[i] < INF / 2] for i in range(Q)]
+        ids = self._to_gids(
+            [res_i[i][res_v[i] < INF / 2] for i in range(Q)])
         return ids, stats

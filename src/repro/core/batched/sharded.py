@@ -291,8 +291,8 @@ class ShardedEngine:
         return jax.jit(shard_map(fn, mesh=self.mesh, in_specs=in_specs,
                                  out_specs=P(), check_vma=False))
 
-    def insert_batch(self, vectors: np.ndarray,
-                     metadata: np.ndarray) -> np.ndarray:
+    def insert_batch(self, vectors: np.ndarray, metadata: np.ndarray, *,
+                     gids: np.ndarray | None = None) -> np.ndarray:
         """Append (vector, metadata) rows to the live index (DESIGN.md §9):
         balance-aware shard placement, slab writes + validity-bit flips,
         reverse-edge graph repair, and incremental atlas updates all happen
@@ -306,9 +306,69 @@ class ShardedEngine:
             raise ValueError(
                 "index has no insert state; build_sharded_index(...) it "
                 "with capacity=... to reserve append room")
-        gids, touched = insert_rows(self._istate, vectors, metadata)
-        self._refresh_device_index(touched)
+        from repro.core.batched.lifecycle import ensure_capacity
+
+        st, mcfg = self._istate, self.cfg.maintenance
+        room = ensure_capacity(st, np.asarray(vectors).shape[0], mcfg)
+        if room["grown"]:
+            # keep the shape-baked knob truthful for snapshot/restore
+            self.cfg = self.cfg.with_knobs(
+                {"serve.capacity": room["new_cap"] * len(st.shards)})
+        gids, touched = insert_rows(st, vectors, metadata, gids=gids,
+                                    defer_repair=mcfg.defer_repair)
+        if room["compacted"] or room["grown"]:
+            self.refresh_device()  # rows moved / shapes changed: full
+        else:
+            self._refresh_device_index(touched)
         return gids
+
+    def delete_batch(self, gids) -> int:
+        """Tombstone documents by global id (DESIGN.md §12): clear their
+        bits on the host mirror and re-place the packed validity bitmap —
+        the single liveness source the fused search reads — so a delete
+        costs one bit-pack + transfer. No recompile, no graph/atlas work
+        (tombstones keep routing walks until compaction recycles them).
+        Returns the number of rows tombstoned."""
+        if self._istate is None:
+            raise ValueError(
+                "index has no insert state; deletes need a capacity-slab "
+                "index (build_sharded_index(..., capacity=...))")
+        from repro.core.batched.lifecycle import delete_rows
+
+        st = self._istate
+        n, touched = delete_rows(st, gids)
+        if hasattr(self, "_host"):
+            for s in touched:
+                self._host["valid"][s] = st.shards[s].valid
+            valid = self._host["valid"]
+        else:
+            valid = np.stack([sl.valid for sl in st.shards])
+        self.valid_bm = self._put(pack_bits(jnp.asarray(valid)))
+        return n
+
+    def refresh_device(self, touched: list[int] | None = None) -> None:
+        """Re-place the sharded device arrays from the host mirror after
+        host-side maintenance (compaction, growth, deferred repair) —
+        the uniform engine hook ``MaintenanceLoop`` publishes through.
+        ``touched=None`` refreshes every shard; slab growth invalidates
+        the stacked host cache so the new shapes propagate (the jitted
+        shard_map program retraces once)."""
+        st = self._istate
+        if st is None:
+            return
+        if (hasattr(self, "_host")
+                and self._host["vectors"].shape[1] != st.shards[0].cap):
+            del self._host  # stale stacked shapes after grow_state
+            touched = None
+        if touched is None:
+            touched = list(range(len(st.shards)))
+        self._refresh_device_index(touched)
+
+    @property
+    def state(self):
+        """The host ``InsertState`` mirror (None on a build-once index) —
+        what the lifecycle/maintenance subsystem mutates."""
+        return self._istate
 
     def _refresh_device_index(self, touched: list[int]) -> None:
         st, put = self._istate, self._put

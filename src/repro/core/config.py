@@ -122,6 +122,34 @@ class ServeConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class MaintenanceConfig:
+    """Document-lifecycle + background-maintenance knobs (DESIGN.md §12).
+    All runtime-tunable: none of them is burned into device shapes, so a
+    live service can retune its maintenance schedule without a rebuild."""
+
+    # ingest defers graph repair / centroid refresh / recluster checks to
+    # the maintenance loop (slab writes + bit flips only on the hot path)
+    defer_repair: bool = False
+    # max backlog rows one maintenance step repairs (the step budget)
+    repair_batch_rows: int = 256
+    # compact a shard once its tombstoned fraction of written rows
+    # exceeds this (and at least compact_min_rows are dead)
+    compact_tombstone_frac: float = 0.25
+    compact_min_rows: int = 32
+    # post-compaction relink: rows whose degree fell below
+    # min_degree_frac * graph_k get their neighbourhood recomputed
+    min_degree_frac: float = 0.5
+    # slab growth past capacity (re-shard instead of raising): per-shard
+    # cap multiplier; auto_grow False restores the hard-capacity ValueError
+    grow_factor: float = 2.0
+    auto_grow: bool = True
+    # centroid drift that makes the loop schedule a recluster check
+    drift_threshold: float = 0.15
+    # safety valve for run_until_idle
+    max_steps_per_drain: int = 64
+
+
+@dataclasses.dataclass(frozen=True)
 class FnsConfig:
     """The whole stack's knob tree. Frozen and hashable: engines key
     compiled programs on it, snapshots embed its flattened form, and the
@@ -133,6 +161,7 @@ class FnsConfig:
     walk: WalkConfig = WalkConfig()
     kernel: KernelConfig = KernelConfig()
     serve: ServeConfig = ServeConfig()
+    maintenance: MaintenanceConfig = MaintenanceConfig()
 
     # -- flat addressing ----------------------------------------------------
 

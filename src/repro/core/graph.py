@@ -191,6 +191,72 @@ def assign_shards_balanced(fill: np.ndarray, cap: int,
     return out
 
 
+def _request_reverse(adjacency: np.ndarray, vectors: np.ndarray, x: int,
+                     y: int, alpha: float) -> tuple[int, int]:
+    """Ask row ``y`` to carry the reverse edge (y -> x): appended into a
+    free slot when one exists, else y's neighbourhood is re-selected by
+    the build's α-RNG rule over {neighbours of y} ∪ {x}. Returns
+    (edges_added, repairs) — the accounting both the append path and the
+    compaction relink share."""
+    r_width = adjacency.shape[1]
+    row = adjacency[y]
+    deg = int((row >= 0).sum())
+    if x in row[:deg]:
+        return 0, 0
+    if deg < r_width:
+        row[deg] = x
+        return 1, 0
+    cand = np.concatenate([row[:deg], [x]]).astype(np.int32)
+    kept = _alpha_rng_prune(int(y), cand, vectors, r_width, alpha)
+    row[: kept.size] = kept
+    row[kept.size:] = -1
+    return int(np.isin(x, kept)), 1
+
+
+def relink_rows(adjacency: np.ndarray, vectors: np.ndarray,
+                rows: np.ndarray, n_total: int, *, k: int = 32,
+                alpha: float = 1.2) -> dict:
+    """Rebuild the neighbourhoods of specific ``rows`` in place — the
+    compaction repair rule (DESIGN.md §12). Compacting a slab drops every
+    edge that pointed at a recycled slot; rows left under-connected get
+    fresh forward kNN edges over the surviving rows [0, n_total) (existing
+    edges are kept and deduplicated, the union α-RNG-pruned when it
+    overflows the row width), and each new forward edge requests its
+    reverse via the same rule the append path uses. Returns
+    {"relinked", "edges_added", "repairs"}."""
+    r_width = adjacency.shape[1]
+    rows = np.asarray(rows, np.int64)
+    if rows.size == 0 or n_total <= 1:
+        return {"relinked": 0, "edges_added": 0, "repairs": 0}
+    sims_all = vectors[rows] @ vectors[:n_total].T
+    edges_added = repairs = 0
+    for i, x in enumerate(rows):
+        sims = sims_all[i]
+        sims[x] = -np.inf                       # no self edge
+        kk = min(k, r_width, n_total - 1)
+        part = np.argpartition(-sims, kk - 1)[:kk]
+        cand = part[np.argsort(-sims[part])].astype(np.int32)
+        row = adjacency[x]
+        deg = int((row >= 0).sum())
+        merged = np.concatenate([row[:deg], cand])
+        _, first = np.unique(merged, return_index=True)
+        merged = merged[np.sort(first)]         # stable: old edges first
+        if merged.size > r_width:
+            merged = _alpha_rng_prune(int(x), merged, vectors, r_width,
+                                      alpha)
+        added = merged.size - deg
+        adjacency[x, : merged.size] = merged
+        adjacency[x, merged.size:] = -1
+        edges_added += max(added, 0)
+        for y in cand:
+            ea, rp = _request_reverse(adjacency, vectors, int(x), int(y),
+                                      alpha)
+            edges_added += ea
+            repairs += rp
+    return {"relinked": int(rows.size), "edges_added": edges_added,
+            "repairs": repairs}
+
+
 def patch_adjacency(adjacency: np.ndarray, vectors: np.ndarray,
                     n_before: int, n_after: int, *, k: int = 32,
                     alpha: float = 1.2) -> dict:
@@ -226,20 +292,10 @@ def patch_adjacency(adjacency: np.ndarray, vectors: np.ndarray,
         adjacency[x, nbrs.size:] = -1
         edges_added += nbrs.size
         for y in nbrs:
-            row = adjacency[y]
-            deg = int((row >= 0).sum())
-            if x in row[:deg]:
-                continue
-            if deg < r_width:
-                row[deg] = x
-                edges_added += 1
-                continue
-            cand = np.concatenate([row[:deg], [x]]).astype(np.int32)
-            kept = _alpha_rng_prune(int(y), cand, vectors, r_width, alpha)
-            row[: kept.size] = kept
-            row[kept.size:] = -1
-            repairs += 1
-            edges_added += int(np.isin(x, kept))
+            ea, rp = _request_reverse(adjacency, vectors, int(x), int(y),
+                                      alpha)
+            edges_added += ea
+            repairs += rp
     return {"edges_added": edges_added, "repairs": repairs}
 
 

@@ -38,6 +38,18 @@ POINTS = (
     "journal.mid-append",
     # snapshot tmp dir complete, atomic rename not yet done (ckpt._write)
     "snapshot.pre-rename",
+    # validity bits cleared on the host, device bitmap not yet re-placed
+    # (lifecycle.delete_rows)
+    "lifecycle.post-tombstone",
+    # maintenance step about to drain deferred graph repair (repair_range
+    # backlog) — a crash here must leave the backlog replayable
+    "maintenance.pre-repair",
+    # compaction has picked its survivors but the slab remap is not done
+    # (lifecycle.compact_shard) — the classic torn-compaction moment
+    "maintenance.mid-compact",
+    # maintenance finished host-side work, device refresh not yet published
+    # (MaintenanceLoop.step)
+    "maintenance.pre-publish",
 )
 
 

@@ -44,6 +44,7 @@ import dataclasses
 import json
 import os
 import struct
+import typing
 import zlib
 
 import numpy as np
@@ -57,8 +58,14 @@ from repro.core.batched.sharded import ShardedEngine, index_from_state
 from repro.core.config import FnsConfig, check_state_config
 from repro.launch.mesh import index_axis_size
 
-FORMAT = 1
-MAGIC = 0x464E534A  # "FNSJ"
+FORMAT = 2  # v2: per-shard liveness masks + lifecycle counters/backlog
+# Record kinds are distinguished by magic so the legacy insert framing is
+# byte-identical (a pre-lifecycle journal replays unchanged); the header
+# CRC covers the magic, so a flipped kind is corruption, never a reparse.
+MAGIC = 0x464E534A          # "FNSJ": insert, auto-assigned gids (legacy)
+MAGIC_INSERT_GIDS = 0x464E5347  # "FNSG": insert with explicit gids
+MAGIC_DELETE = 0x464E5344   # "FNSD": delete by gids
+MAGIC_COMPACT = 0x464E5343  # "FNSC": compact tombstoned shards
 _HDR = struct.Struct("<IQIII")  # magic, seq, rows, dim, fields
 _CRC = struct.Struct("<I")
 
@@ -73,25 +80,41 @@ class JournalCorruption(DurabilityError):
     not a torn tail — never silently dropped."""
 
 
+class JournalRecord(typing.NamedTuple):
+    """One replayable WAL operation. ``seq``/``vectors``/``metadata``
+    keep their historical positions (pre-lifecycle code unpacked records
+    as (seq, vecs, meta) tuples); ``kind`` is "insert" | "delete" |
+    "compact", and ``gids`` carries explicit insert ids (None = the
+    replay re-derives them from ``next_gid``, which is deterministic
+    because every operation replays in seq order) or the delete set."""
+
+    seq: int
+    vectors: np.ndarray | None
+    metadata: np.ndarray | None
+    kind: str = "insert"
+    gids: np.ndarray | None = None
+
+
 class Journal:
-    """Append-only, CRC-framed ingest log. One record per ingest batch:
+    """Append-only, CRC-framed operation log. One record per ingest /
+    delete / compact operation:
 
         header  = magic u32 | seq u64 | rows u32 | dim u32 | fields u32
         hcrc    = crc32(header) u32
         payload = vectors f32 row-major | metadata i32 row-major
+                  [| gids i32]                    (kind-dependent)
         pcrc    = crc32(payload) u32
+
+    The magic encodes the record kind (module constants); insert records
+    with auto-assigned gids keep the pre-lifecycle framing byte-for-byte.
     """
 
     def __init__(self, path: str):
         self.path = path
 
-    def append(self, seq: int, vectors: np.ndarray,
-               metadata: np.ndarray) -> None:
-        vectors = np.ascontiguousarray(vectors, np.float32)
-        metadata = np.ascontiguousarray(np.atleast_2d(metadata), np.int32)
-        rows, dim = vectors.shape
-        header = _HDR.pack(MAGIC, seq, rows, dim, metadata.shape[1])
-        payload = vectors.tobytes() + metadata.tobytes()
+    def _append_record(self, magic: int, seq: int, rows: int, dim: int,
+                       fields: int, payload: bytes) -> None:
+        header = _HDR.pack(magic, seq, rows, dim, fields)
         body = header + _CRC.pack(zlib.crc32(header)) + payload
         with open(self.path, "ab") as f:
             # two writes with the fault point between them: a SIGKILL here
@@ -105,30 +128,63 @@ class Journal:
             f.flush()
             os.fsync(f.fileno())
 
-    def read(self) -> tuple[list[tuple[int, np.ndarray, np.ndarray]], int]:
+    def append(self, seq: int, vectors: np.ndarray, metadata: np.ndarray,
+               gids: np.ndarray | None = None) -> None:
+        """WAL an insert batch (explicit ``gids`` = re-introduction of
+        deleted documents; they ride the payload so replay reuses them)."""
+        vectors = np.ascontiguousarray(vectors, np.float32)
+        metadata = np.ascontiguousarray(np.atleast_2d(metadata), np.int32)
+        rows, dim = vectors.shape
+        payload = vectors.tobytes() + metadata.tobytes()
+        magic = MAGIC
+        if gids is not None:
+            magic = MAGIC_INSERT_GIDS
+            payload += np.ascontiguousarray(gids, np.int32).tobytes()
+        self._append_record(magic, seq, rows, dim, metadata.shape[1],
+                            payload)
+
+    def append_delete(self, seq: int, gids) -> None:
+        """WAL a delete (the gid set is the whole operation)."""
+        gids = np.ascontiguousarray(np.asarray(gids, np.int32).ravel())
+        self._append_record(MAGIC_DELETE, seq, gids.size, 0, 0,
+                            gids.tobytes())
+
+    def append_compact(self, seq: int) -> None:
+        """WAL a compaction. The record carries no payload: compaction is
+        deterministic given the slab state, and replay force-compacts
+        every tombstoned shard — a superset of any threshold-triggered
+        run, equally consistent (documents are addressed by gid, never by
+        slot, so replayed row layouts need not match the crashed run's)."""
+        self._append_record(MAGIC_COMPACT, seq, 0, 0, 0, b"")
+
+    def read(self) -> tuple[list[JournalRecord], int]:
         """Parse the journal: -> (records, clean_len). ``records`` are
-        (seq, vectors, metadata) in append order; ``clean_len`` is the
-        byte length of the intact prefix (a torn tail after it is dropped,
+        ``JournalRecord``s in append order; ``clean_len`` is the byte
+        length of the intact prefix (a torn tail after it is dropped,
         per the module torn-tail rule). Complete-but-CRC-failing bytes
         raise ``JournalCorruption``."""
         if not os.path.exists(self.path):
             return [], 0
         with open(self.path, "rb") as f:
             data = f.read()
-        out: list[tuple[int, np.ndarray, np.ndarray]] = []
+        out: list[JournalRecord] = []
         off = 0
         hdr_n = _HDR.size + _CRC.size
+        kinds = {MAGIC: "insert", MAGIC_INSERT_GIDS: "insert",
+                 MAGIC_DELETE: "delete", MAGIC_COMPACT: "compact"}
         while off < len(data):
             if off + hdr_n > len(data):
                 break  # torn tail: incomplete header
             header = data[off:off + _HDR.size]
             magic, seq, rows, dim, fields = _HDR.unpack(header)
             (hcrc,) = _CRC.unpack(data[off + _HDR.size:off + hdr_n])
-            if magic != MAGIC or zlib.crc32(header) != hcrc:
+            if magic not in kinds or zlib.crc32(header) != hcrc:
                 raise JournalCorruption(
                     f"journal {self.path!r}: record header at byte {off} "
                     f"failed CRC32 — corrupted, refusing to replay")
             plen = rows * dim * 4 + rows * fields * 4
+            if magic in (MAGIC_INSERT_GIDS, MAGIC_DELETE):
+                plen += rows * 4  # trailing i32 gid block
             end = off + hdr_n + plen + _CRC.size
             if end > len(data):
                 break  # torn tail: incomplete payload
@@ -138,11 +194,22 @@ class Journal:
                 raise JournalCorruption(
                     f"journal {self.path!r}: record seq {seq} payload "
                     f"failed CRC32 — corrupted, refusing to replay")
-            vecs = np.frombuffer(payload[:rows * dim * 4],
-                                 np.float32).reshape(rows, dim)
-            meta = np.frombuffer(payload[rows * dim * 4:],
-                                 np.int32).reshape(rows, fields)
-            out.append((seq, vecs, meta))
+            if magic == MAGIC_DELETE:
+                rec = JournalRecord(seq, None, None, "delete",
+                                    np.frombuffer(payload, np.int32))
+            elif magic == MAGIC_COMPACT:
+                rec = JournalRecord(seq, None, None, "compact")
+            else:
+                vn = rows * dim * 4
+                mn = vn + rows * fields * 4
+                vecs = np.frombuffer(payload[:vn],
+                                     np.float32).reshape(rows, dim)
+                meta = np.frombuffer(payload[vn:mn],
+                                     np.int32).reshape(rows, fields)
+                gids = (np.frombuffer(payload[mn:], np.int32)
+                        if magic == MAGIC_INSERT_GIDS else None)
+                rec = JournalRecord(seq, vecs, meta, "insert", gids)
+            out.append(rec)
             off = end
         return out, off
 
@@ -177,6 +244,13 @@ def state_to_tree(state: InsertState, extra: dict | None = None) -> dict:
             "batches": state.batches, "repairs": state.repairs,
             "applied_seq": state.applied_seq,
             "insert_params": dataclasses.asdict(state.params),
+            # lifecycle (format 2): counters + the deferred-repair backlog
+            # (FIFO of [shard, lo, hi] — row ranges are snapshot-stable
+            # because compaction drains a shard's backlog before remapping)
+            "deleted": state.deleted, "compactions": state.compactions,
+            "grown": state.grown,
+            "pending": [[int(s), int(lo), int(hi)]
+                        for s, lo, hi in state.pending],
             "shards": [{"n_valid": int(sh.n_valid),
                         "reclusters": int(sh.atlas.reclusters)}
                        for sh in state.shards],
@@ -186,6 +260,7 @@ def state_to_tree(state: InsertState, extra: dict | None = None) -> dict:
         tree[f"shard{s}"] = {
             "vectors": sh.vectors, "adjacency": sh.adjacency,
             "metadata": sh.metadata, "global_ids": sh.global_ids,
+            "live": sh.live.astype(np.uint8),
             "assign": sh.atlas.assign, "centroids": sh.atlas.centroids,
             "base_counts": sh.atlas.base_counts,
             "base_centroids": sh.atlas.base_centroids}
@@ -200,10 +275,10 @@ def state_from_tree(arrays: dict) -> tuple[InsertState, dict]:
     except Exception as e:
         raise DurabilityError(
             f"snapshot meta leaf is unreadable: {e}") from e
-    if meta.get("format") != FORMAT:
+    if meta.get("format") not in (1, FORMAT):
         raise DurabilityError(
             f"snapshot format {meta.get('format')!r} is not supported "
-            f"(this build reads format {FORMAT})")
+            f"(this build reads formats 1..{FORMAT})")
     shards = []
     for s, shm in enumerate(meta["shards"]):
         pre = f"shard{s}/"
@@ -214,18 +289,27 @@ def state_from_tree(arrays: dict) -> tuple[InsertState, dict]:
             base_centroids=np.array(arrays[pre + "base_centroids"],
                                     np.float32),
             reclusters=shm["reclusters"])
+        # format-1 snapshots predate deletes: no live leaf means liveness
+        # is the written prefix (ShardState derives it from n_valid)
+        live = (np.array(arrays[pre + "live"]).astype(bool)
+                if pre + "live" in arrays else None)
         shards.append(ShardState(
             np.array(arrays[pre + "vectors"], np.float32),
             np.array(arrays[pre + "adjacency"], np.int32),
             np.array(arrays[pre + "metadata"], np.int32),
             np.array(arrays[pre + "global_ids"], np.int32),
-            shm["n_valid"], atlas))
+            shm["n_valid"], atlas, live=live))
     state = InsertState(
         shards=shards, v_cap=meta["v_cap"], graph_k=meta["graph_k"],
         alpha=meta["alpha"], seed=meta["seed"], next_gid=meta["next_gid"],
         params=InsertParams(**meta["insert_params"]),
         inserted=meta["inserted"], batches=meta["batches"],
-        repairs=meta["repairs"], applied_seq=meta["applied_seq"])
+        repairs=meta["repairs"], applied_seq=meta["applied_seq"],
+        deleted=meta.get("deleted", 0),
+        compactions=meta.get("compactions", 0),
+        grown=meta.get("grown", 0),
+        pending=[(int(s), int(lo), int(hi))
+                 for s, lo, hi in meta.get("pending", [])])
     return state, meta["extra"]
 
 

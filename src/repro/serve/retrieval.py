@@ -74,9 +74,13 @@ class RetrievalService:
     _sharded: ShardedEngine | None = dataclasses.field(default=None,
                                                        repr=False)
     # crash-consistency (DESIGN.md §10): attached by enable_durability /
-    # recover; when set, every ingest is journaled before it is applied
+    # recover; when set, every ingest/delete/compact is journaled before
+    # it is applied
     _store: object | None = dataclasses.field(default=None, repr=False)
     _next_seq: int = dataclasses.field(default=1, repr=False)
+    # background maintenance (DESIGN.md §12), built lazily on first
+    # maintenance_step — owns the deferred-repair/compaction schedule
+    _mloop: object | None = dataclasses.field(default=None, repr=False)
 
     @staticmethod
     def build(ds: Dataset, *, config: FnsConfig | None = None,
@@ -273,6 +277,12 @@ class RetrievalService:
                 queries = queries + [dummy] * (target - q_real)
         ids, stats = eng.search(queries)
         stats = {k: v[:q_real] for k, v in stats.items()}
+        st = _engine_state(eng)
+        if st is not None:
+            # deferred work a result set might observe: un-repaired rows
+            # plus tombstones still holding slab slots (DESIGN.md §12) —
+            # a scalar, added after the per-query stat slicing above
+            stats["maintenance_lag"] = st.pending_rows + st.tombstones
         if any(e is not None for e in errors):
             stats["errors"] = errors
         return ids[:q_real], stats
@@ -313,8 +323,30 @@ class RetrievalService:
                 f"a larger v_cap to serve it")
         return vectors, metadata
 
-    def ingest(self, vectors: np.ndarray,
-               metadata: np.ndarray) -> np.ndarray:
+    def _validate_gids(self, gids, rows: int, st) -> np.ndarray:
+        """Explicit-gid ingest validation, BEFORE the journal append: a
+        gid that is still live must be deleted first (id reuse is always
+        explicit, never a silent second row), and the offending ids are
+        named in the error."""
+        gids = np.asarray(gids, np.int32).ravel()
+        if gids.size != rows:
+            raise ValueError(
+                f"ingest got {rows} rows but {gids.size} explicit gids")
+        uniq, counts = np.unique(gids, return_counts=True)
+        if (counts > 1).any():
+            raise ValueError(
+                f"duplicate gids within one ingest batch: "
+                f"{uniq[counts > 1].tolist()}")
+        shard_of, _rows = st.locate_gids(gids)
+        alive = gids[shard_of >= 0]
+        if alive.size:
+            raise ValueError(
+                f"gids {alive.tolist()} are still live; delete them "
+                f"before re-inserting (id reuse must be explicit)")
+        return gids
+
+    def ingest(self, vectors: np.ndarray, metadata: np.ndarray, *,
+               gids: np.ndarray | None = None) -> np.ndarray:
         """Append documents to the live serving index (DESIGN.md §9):
         routed to the same engine ``query_batch`` uses (sharded when the
         mesh partitions the corpus), so newly ingested rows are visible to
@@ -334,14 +366,112 @@ class RetrievalService:
                 "room")
         eng = self._live_engine()
         vectors, metadata = self._validate_ingest(vectors, metadata, eng)
+        if gids is not None:
+            gids = self._validate_gids(gids, vectors.shape[0],
+                                       _engine_state(eng))
         seq = self._next_seq
         if self._store is not None:
-            self._store.journal.append(seq, vectors, metadata)
-        gids = eng.insert_batch(vectors, metadata)
+            self._store.journal.append(seq, vectors, metadata, gids=gids)
+        out = eng.insert_batch(vectors, metadata, gids=gids)
         if self._store is not None:
             _engine_state(eng).applied_seq = seq
             self._next_seq = seq + 1
-        return gids
+        self._sync_capacity(eng)
+        return out
+
+    def _sync_capacity(self, eng) -> None:
+        """Growth past capacity re-shards in place (DESIGN.md §12); the
+        engine keeps its ``serve.capacity`` knob truthful, so mirror it
+        into the service fields the snapshot records."""
+        if eng.cfg is not self.config:
+            self.config = eng.cfg
+            self.capacity = eng.cfg.serve.capacity
+
+    # -- document lifecycle (DESIGN.md §12) ---------------------------------
+
+    def delete(self, gids) -> int:
+        """Tombstone documents by global id: journaled (when durability is
+        on) BEFORE the validity bits clear, exactly like ingest, so a
+        crash at any point replays to the same live set. Unknown or
+        already-deleted ids raise ``ValueError`` naming them — validated
+        up front, before the journal sees the record. Returns the number
+        of rows deleted."""
+        if self.capacity is None:
+            raise ValueError(
+                "service was built without ingest capacity; deletes need "
+                "a capacity-slab service (RetrievalService.build(..., "
+                "capacity=...))")
+        eng = self._live_engine()
+        st = _engine_state(eng)
+        gids = np.unique(np.asarray(gids, np.int64).ravel())
+        shard_of, _rows = st.locate_gids(gids)
+        missing = gids[shard_of < 0]
+        if missing.size:
+            raise ValueError(
+                f"delete of unknown or already-deleted gids: "
+                f"{missing.tolist()}")
+        seq = self._next_seq
+        if self._store is not None:
+            self._store.journal.append_delete(seq, gids)
+        n = eng.delete_batch(gids)
+        if self._store is not None:
+            st.applied_seq = seq
+            self._next_seq = seq + 1
+        return n
+
+    def compact_now(self) -> dict:
+        """Force-compact every tombstoned shard right now (the foreground
+        path; the maintenance loop does the same work incrementally when
+        thresholds trip). Journaled before any row moves — replay
+        force-compacts too, and since documents are addressed by gid, a
+        replayed layout is equivalent even if slot assignments differ.
+        Returns the compaction accounting."""
+        from repro.core.batched.lifecycle import compact_state
+
+        eng = self._live_engine()
+        st = _engine_state(eng)
+        if st is None:
+            raise ValueError(
+                "service has no mutable engine state; build with "
+                "capacity=... to enable the document lifecycle")
+        journaled = self._store is not None and st.tombstones > 0
+        seq = self._next_seq
+        if journaled:
+            self._store.journal.append_compact(seq)
+        rep = compact_state(st, self._cfg().maintenance, force=True)
+        if rep["shards"]:
+            eng.refresh_device(rep["shards"])
+        if journaled:
+            st.applied_seq = seq
+            self._next_seq = seq + 1
+        return rep
+
+    def maintenance_step(self, budget_rows: int | None = None) -> dict:
+        """Run ONE budgeted unit of background maintenance (deferred
+        graph repair, threshold compaction, drift recluster — cheapest
+        stale signal first) and publish it to the device slabs. The
+        serving loop calls this between query batches; with nothing
+        stale it returns {"kind": "idle"} at the cost of a few host
+        reads. See ``serve.maintenance.MaintenanceLoop``."""
+        return self._maintenance_loop().step(budget_rows)
+
+    def _maintenance_loop(self):
+        from repro.serve.maintenance import MaintenanceLoop
+
+        eng = self._live_engine()
+        if self._mloop is None or self._mloop.engine is not eng:
+            def on_compact(shards, _eng=eng):
+                # WAL the compaction BEFORE any row moves (same ordering
+                # contract as ingest/delete)
+                if self._store is not None:
+                    seq = self._next_seq
+                    self._store.journal.append_compact(seq)
+                    _engine_state(_eng).applied_seq = seq
+                    self._next_seq = seq + 1
+
+            self._mloop = MaintenanceLoop(eng, self._cfg().maintenance,
+                                          on_compact=on_compact)
+        return self._mloop
 
     # -- durability: snapshot / restore / recover (DESIGN.md §10) ----------
 
@@ -433,12 +563,25 @@ class RetrievalService:
         recs, _ = store.journal.read()
         last = max([state.applied_seq] + [r[0] for r in recs])
         if replay:
-            for seq, vecs, meta in recs:
-                if seq > state.applied_seq:
-                    eng.insert_batch(vecs, meta)
-                    state.applied_seq = seq
+            from repro.core.batched.lifecycle import compact_state
+
+            for rec in recs:
+                if rec.seq <= state.applied_seq:
+                    continue  # idempotent replay: already in the snapshot
+                if rec.kind == "insert":
+                    eng.insert_batch(rec.vectors, rec.metadata,
+                                     gids=rec.gids)
+                elif rec.kind == "delete":
+                    eng.delete_batch(rec.gids)
+                else:  # compact: deterministic from the replayed slabs
+                    rep = compact_state(state, svc._cfg().maintenance,
+                                        force=True)
+                    if rep["shards"]:
+                        eng.refresh_device(rep["shards"])
+                state.applied_seq = rec.seq
             store.journal.repair()
         svc._next_seq = last + 1
+        svc._sync_capacity(eng)
         return svc
 
     @classmethod
@@ -461,12 +604,19 @@ class RetrievalService:
         stats = eng.insert_stats if eng is not None else None
         if stats is None:
             n = self._corpus()[0].shape[0]
+            free = self.capacity - n if self.capacity else 0
             stats = {"inserted_rows": 0, "corpus_rows": n,
                      "dynamic_fraction": 0.0,
-                     "free_capacity": (self.capacity - n
-                                       if self.capacity else 0),
+                     "free_capacity": free,
                      "insert_batches": 0, "reclusters": 0,
-                     "reverse_edge_repairs": 0}
+                     "reverse_edge_repairs": 0,
+                     # lifecycle signals (DESIGN.md §12): a build-once
+                     # service has no tombstones, backlog, or growth
+                     "deleted_rows": 0, "tombstoned_rows": 0,
+                     "tombstone_fraction": 0.0, "free_slots": free,
+                     "repair_backlog_rows": 0, "compactions": 0,
+                     "slab_growths": 0, "centroid_drift": 0.0,
+                     "maintenance_lag": 0}
         stats["sequential_index_stale_rows"] = (
             stats["inserted_rows"] if self.index is not None else 0)
         return stats

@@ -539,10 +539,14 @@ _SMALL_DS, _SMALL_QS = _small_fixture()
 @settings(max_examples=6, deadline=None)
 @given(st.lists(st.sampled_from(["ingest", "snapshot", "query"]),
                 min_size=2, max_size=5),
-       st.sampled_from(list(faults.POINTS) + [None]))
+       st.sampled_from([p for p in faults.POINTS
+                        if p.split(".")[0] in ("ingest", "journal",
+                                               "snapshot")] + [None]))
 def test_recovery_interleavings(ops, crash):
     """Any schedule of (ingest | snapshot | query) followed by a crash at
-    any fault point must recover to exactly the acknowledged state:
+    any ingest-path fault point must recover to exactly the acknowledged
+    state (the lifecycle/maintenance points are exercised by
+    test_lifecycle.py, where the triggering ops exist):
     replay is idempotent (a second recovery is bit-identical) and
     staleness counters survive."""
     ds = _SMALL_DS

@@ -404,8 +404,16 @@ def test_insert_capacity_and_vocab_guards():
     ds = _tiny_ds(n=260)
     eng = _build_single_engine(ds.vectors[:250], ds.metadata[:250],
                                tuple(ds.vocab_sizes), capacity=260)
+    # past-capacity inserts now GROW the slab (DESIGN.md §12) instead of
+    # raising; auto_grow=False restores the hard-capacity error
+    eng.cfg = eng.cfg.with_knobs({"maintenance.auto_grow": False})
     with pytest.raises(ValueError, match="capacity"):
         eng.insert_batch(ds.vectors[:20], ds.metadata[:20])
+    eng.cfg = eng.cfg.with_knobs({"maintenance.auto_grow": True})
+    gids = eng.insert_batch(ds.vectors[:20], ds.metadata[:20])
+    assert gids.size == 20
+    assert eng.insert_stats["slab_growths"] == 1
+    assert eng.cfg.serve.capacity == eng.state.shards[0].cap > 260
     with pytest.raises(ValueError, match="value range"):
         eng.insert_batch(ds.vectors[250:251],
                          np.full((1, ds.metadata.shape[1]), 10 ** 6,
