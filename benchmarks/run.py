@@ -240,6 +240,16 @@ def smoke() -> None:
     assert 0.0 <= pi["recall"] <= 1.0
     _csv("search/smoke_insert", 1e6 / ins["rows_per_s"],
          f"post_recall={pi['recall']:.3f}")
+    # serving pipeline: Q=1024 tickets through the admission queue /
+    # batch former + double-buffered dispatch, with the p50/p99 sojourn
+    # SLO row the BENCH_search.json trajectory tracks (DESIGN.md §13)
+    slo = next(v for k, v in res.items() if k.startswith("serve_slo/q1024"))
+    assert slo["batches"] >= 2, slo  # the queue really cut >1 bucket
+    assert slo["p50_ms"] > 0.0 and slo["p99_ms"] >= slo["p50_ms"], slo
+    assert 0.0 <= slo["recall"] <= 1.0
+    _csv("search/smoke_serve_slo", 1e6 / slo["qps"],
+         f"p50_ms={slo['p50_ms']:.1f} p99_ms={slo['p99_ms']:.1f} "
+         f"batches={slo['batches']}")
     # durability rows: snapshot/restore/recover each completed and the
     # recovered index still answers in one fused dispatch
     pr = next(v for k, v in res.items() if k.startswith("post_recover/"))
@@ -259,7 +269,7 @@ def main() -> None:
     from benchmarks.search_bench import OUT_PATH as SEARCH_OUT
     from benchmarks.search_bench import (durability_bench, insert_bench,
                                          or_search_bench, search_bench,
-                                         write_baseline)
+                                         slo_bench, write_baseline)
 
     results: dict = {}
     t_all = time.time()
@@ -354,6 +364,7 @@ def main() -> None:
     results["search"].update(or_search_bench())  # disjunctive or2 rows
     results["search"].update(insert_bench())     # dynamic-insert rows
     results["search"].update(durability_bench())  # snapshot/journal rows
+    results["search"].update(slo_bench())        # serving p50/p99 SLO rows
     write_baseline(results["search"])
     print("\n== Fused single-dispatch search (Q x selectivity) ==")
     for name, r in results["search"].items():
@@ -375,6 +386,13 @@ def main() -> None:
             else:
                 _csv(name, 1e6 / r["rows_per_s"],
                      f"rows_per_s={r['rows_per_s']:.0f}")
+            continue
+        if name.startswith("serve_slo/"):
+            print(f"{name:32s} qps={r['qps']:8.1f} "
+                  f"p50={r['p50_ms']:7.1f}ms p99={r['p99_ms']:7.1f}ms "
+                  f"batches={r['batches']}")
+            _csv(f"search/{name}", 1e6 / r["qps"],
+                 f"p50_ms={r['p50_ms']:.1f} p99_ms={r['p99_ms']:.1f}")
             continue
         print(f"{name:14s} qps={r['qps']:8.1f} p50={r['p50_ms']:7.1f}ms "
               f"p99={r['p99_ms']:7.1f}ms recall={r['recall']:.3f} "

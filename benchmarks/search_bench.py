@@ -575,6 +575,87 @@ def durability_bench(*, n: int = 8000, d: int = 64, k: int = 10,
     return out
 
 
+def slo_bench(*, q_total: int = 1024, n: int = 8000, d: int = 64,
+              k: int = 10, graph_k: int = 16, seed: int = 7,
+              queue_max_batch: int = 256, n_shards: int = 2,
+              q_lanes: int = 4) -> dict:
+    """Serving-SLO rows (DESIGN.md §13): ``q_total`` tickets pushed
+    through the admission-queue → dispatch → collect pipeline, reporting
+    per-ticket sojourn p50/p99 (admit-to-result, the number a latency SLO
+    is written against) and end-to-end QPS.
+
+    With ≥ ``n_shards * q_lanes`` devices the SAME sharded index runs
+    twice on one 2D mesh — once with query replication forced (the
+    one-batch-per-mesh baseline: every device walks all Q) and once
+    query-sharded (each lane group walks Q/q_lanes) — so the
+    ``speedup_vs_replicated`` field on the lanes row is the tentpole's
+    scaling proof: throughput past one-batch-per-mesh on identical
+    hardware and an identical index. On smaller sessions (the smoke CI
+    job) a single-device pipeline row still exercises the queue,
+    bucketing, and overlap machinery."""
+    import jax
+
+    from repro.core.search import SearchParams
+    from repro.serve.pipeline import ServePipeline
+    from repro.serve.retrieval import RetrievalService
+
+    cfg = bench_config(k=k, graph_k=graph_k,
+                       knobs={"serve.queue_max_batch": queue_max_batch,
+                              "serve.queue_budget_ms": 0.0})
+    ds = make_selectivity_dataset(SELECTIVITIES, n=n, d=d, n_components=24,
+                                  seed=seed)
+    qs = make_selectivity_queries(ds, 1, q_total)
+    attach_ground_truth(ds, qs, k=k)
+    out: dict = {}
+
+    def run(svc, key, extra):
+        pipe = ServePipeline(svc)
+        tickets = [pipe.submit(q.vector, q.predicate) for q in qs]
+        t0 = time.time()
+        while not all(t.done for t in tickets):
+            if pipe.pump() == 0 and len(pipe.queue) == 0:
+                pipe.drain()
+        wall = time.time() - t0
+        soj = np.asarray([t.sojourn_ms for t in tickets])
+        rec = float(np.mean([recall_at_k(np.asarray(t.ids), q.gt_ids)
+                             for t, q in zip(tickets, qs)]))
+        out[key] = {"qps": q_total / wall,
+                    "p50_ms": float(np.percentile(soj, 50)),
+                    "p99_ms": float(np.percentile(soj, 99)),
+                    "recall": rec, "batches": pipe.batches,
+                    "queue_max_batch": queue_max_batch,
+                    "queue_depth": pipe.depth, **extra}
+        return out[key]
+
+    if len(jax.devices()) >= n_shards * q_lanes:
+        from repro.core.batched.sharded import (ShardedEngine,
+                                                build_sharded_index)
+        from repro.launch.mesh import make_serving_mesh
+
+        sidx = build_sharded_index(ds.vectors, ds.metadata, n_shards,
+                                   config=cfg)
+        mesh = make_serving_mesh(data=n_shards, query=q_lanes)
+        prefix = f"serve_slo/q{q_total}/mesh{n_shards}x{q_lanes}"
+        cfg_rep = cfg.with_knobs({"mesh.query_parallel": False})
+        eng_rep = ShardedEngine(sidx, mesh, config=cfg_rep)
+        svc_rep = RetrievalService(None, SearchParams(k=k), mesh=mesh,
+                                   config=cfg_rep, _ds=ds, _sharded=eng_rep)
+        base = run(svc_rep, f"{prefix}/replicated",
+                   {"n_shards": n_shards, "q_lanes": 1})
+        eng_2d = ShardedEngine(sidx, mesh, config=cfg)
+        svc_2d = RetrievalService(None, SearchParams(k=k), mesh=mesh,
+                                  config=cfg, _ds=ds, _sharded=eng_2d)
+        row = run(svc_2d, f"{prefix}/lanes",
+                  {"n_shards": n_shards, "q_lanes": eng_2d.q_lanes})
+        row["speedup_vs_replicated"] = row["qps"] / base["qps"]
+    else:
+        svc = RetrievalService.build(ds, config=cfg,
+                                     params=SearchParams(k=k))
+        run(svc, f"serve_slo/q{q_total}/pipeline1",
+            {"n_shards": 1, "q_lanes": 1})
+    return out
+
+
 def write_baseline(results: dict, path: str = OUT_PATH) -> None:
     parent = os.path.dirname(path)
     if parent:
@@ -616,6 +697,11 @@ def main(smoke: bool = False) -> dict:
         results.update(durability_bench(n=600, d=16, k=5, reps=1,
                                         graph_k=8, chunk=8, n_chunks=2,
                                         q_post=2))
+        # and the serving pipeline: Q=1024 tickets through the admission
+        # queue + double-buffered dispatch/collect, with p50/p99 sojourn
+        # SLO numbers (query-sharded vs replicated when devices allow)
+        results.update(slo_bench(q_total=1024, n=600, d=16, k=5,
+                                 graph_k=8, queue_max_batch=256))
         # and the tuned-config path when the autotuner artifact is
         # committed: same tiny corpus under the tuned walk knobs (the CI
         # bench-regression gate compares these rows to its baseline)
@@ -636,6 +722,7 @@ def main(smoke: bool = False) -> dict:
         results.update(insert_bench())
         results.update(lifecycle_bench())
         results.update(durability_bench())
+        results.update(slo_bench())
         write_baseline(results)
     return results
 
@@ -662,6 +749,14 @@ if __name__ == "__main__":
             kv = " ".join(f"{k}={v:.1f}" if isinstance(v, float)
                           else f"{k}={v}" for k, v in r.items())
             print(f"{name:28s} {kv}")
+            continue
+        if name.startswith("serve_slo/"):
+            extra = (f" speedup={r['speedup_vs_replicated']:.2f}x"
+                     if "speedup_vs_replicated" in r else "")
+            print(f"{name:32s} qps={r['qps']:8.1f} "
+                  f"p50={r['p50_ms']:7.1f}ms p99={r['p99_ms']:7.1f}ms "
+                  f"recall={r['recall']:.3f} batches={r['batches']}"
+                  + extra)
             continue
         mask_b = r.get("mask_state_bytes",
                        r.get("mask_state_bytes_per_shard", 0))

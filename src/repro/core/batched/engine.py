@@ -32,6 +32,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import faults
 from repro.core.batched.bitmap import (n_words, pack_bits, popcount,
                                        set_bits, test_bits, unpack_bits)
 from repro.core.config import (FnsConfig, KernelConfig, WalkConfig,
@@ -439,6 +440,26 @@ def pack_query_batch(queries: list[Query], *, v_cap: int,
     return q_vecs, jnp.asarray(f_np), jnp.asarray(a_np), bounds
 
 
+def _fence_pack(eng, queries: list[Query]):
+    """Publish-generation fence (DESIGN.md §13), shared by both engines.
+
+    Pack the batch, then check the engine's ``publish_generation`` — the
+    counter every device publish (ingest refresh, tombstone, maintenance
+    swap) bumps. If a publish landed between the pack and here, the packed
+    tables may bake stale vocab domains and the arrays the caller is about
+    to bind may be mid-swap: re-pack against the new state and try again.
+    ``faults.fire("serve.pre-dispatch")`` sits in the window so tests can
+    script the interleaving. Returns ``(packed, generation)`` with
+    ``generation == eng.publish_generation`` at return time."""
+    while True:
+        gen = eng.publish_generation
+        packed = eng._pack_queries(queries)
+        faults.fire("serve.pre-dispatch")
+        if eng.publish_generation == gen:
+            return packed, gen
+        eng.fence_retries += 1
+
+
 class BatchedEngine:
     """Single-dispatch batched search over a device-resident index.
 
@@ -604,6 +625,9 @@ class BatchedEngine:
         self.adjacency = jnp.asarray(slab.adjacency)
         self.metadata = jnp.asarray(slab.metadata)
         self._valid_bm = pack_bits(jnp.asarray(slab.valid))
+        # getattr: the first refresh runs from __init__/from_state before
+        # the counters exist
+        self.publish_generation = getattr(self, "publish_generation", 0) + 1
 
     def _init_programs(self, seed_backend: str) -> None:
         params = self.p
@@ -619,6 +643,8 @@ class BatchedEngine:
             donate_argnums=() if on_cpu else (4, 5, 6))
         self._passes = jax.jit(functools.partial(_eval_passes, kcfg=kcfg))
         self.dispatches = 0
+        self.publish_generation = getattr(self, "publish_generation", 0)
+        self.fence_retries = 0
 
     def insert_batch(self, vectors, metadata, *,
                      gids: np.ndarray | None = None) -> np.ndarray:
@@ -671,6 +697,7 @@ class BatchedEngine:
                 "capacity-slab engine (BatchedEngine(..., capacity=...))")
         n, _ = delete_rows(self._state, gids)
         self._valid_bm = pack_bits(jnp.asarray(self._state.shards[0].valid))
+        self.publish_generation += 1
         return n
 
     def refresh_device(self, touched=None) -> None:
@@ -705,24 +732,46 @@ class BatchedEngine:
         g = self._state.shards[0].global_ids
         return [g[i] for i in ids]
 
+    def dispatch(self, queries: list[Query], seed: int = 0) -> dict:
+        """Fenced pack + ONE jitted call; returns an in-flight token
+        without syncing the host. jax's async dispatch means the device
+        crunches batch N while the host packs batch N+1 — the overlap the
+        serve pipeline (serve/pipeline.py) is built on. The token snapshots
+        the global-id map and the publish generation, so a compaction that
+        remaps rows between dispatch and collect can't mistranslate the
+        in-flight batch's results."""
+        del seed
+        (q_vecs, fields, allowed, bounds), gen = _fence_pack(self, queries)
+        out = self._search(self.datlas, self.vectors, self.adjacency,
+                           self.metadata, q_vecs, fields, allowed,
+                           valid_bm=self._valid_bm, bounds=bounds)
+        self.dispatches += 1
+        gids = (self._state.shards[0].global_ids.copy()
+                if self._state is not None else None)
+        return {"out": out, "q_n": len(queries), "generation": gen,
+                "gids": gids}
+
+    def collect(self, token: dict):
+        """Sync an in-flight ``dispatch`` token: the batch's single host
+        sync + result/stat post-processing. ``stats["generation"]`` is the
+        scalar publish generation the batch was dispatched against."""
+        host = jax.device_get(token["out"])
+        q_n = token["q_n"]
+        res_v, res_i = host["res_v"], host["res_i"]
+        raw = [res_i[i][res_v[i] < INF / 2] for i in range(q_n)]
+        g = token["gids"]
+        ids = raw if g is None else [g[i] for i in raw]
+        stats = {"walks": host["walks"][:q_n].astype(np.int32),
+                 "hops": host["hops"][:q_n].astype(np.int64),
+                 "generation": token["generation"]}
+        return ids, stats
+
     def search(self, queries: list[Query], seed: int = 0):
         """Filtered top-k for a batch: one device dispatch, one host sync.
         ``seed`` is kept for API compat; the device path is deterministic
         (seeds are nearest matching members, never random samples)."""
         del seed
-        Q = len(queries)
-        q_vecs, fields, allowed, bounds = self._pack_queries(queries)
-        out = self._search(self.datlas, self.vectors, self.adjacency,
-                           self.metadata, q_vecs, fields, allowed,
-                           valid_bm=self._valid_bm, bounds=bounds)
-        self.dispatches += 1
-        host = jax.device_get(out)  # the batch's single host sync
-        res_v, res_i = host["res_v"], host["res_i"]
-        ids = self._to_gids(
-            [res_i[i][res_v[i] < INF / 2] for i in range(Q)])
-        stats = {"walks": host["walks"].astype(np.int32),
-                 "hops": host["hops"].astype(np.int64)}
-        return ids, stats
+        return self.collect(self.dispatch(queries))
 
     def search_hostloop(self, queries: list[Query], seed: int = 0):
         """PR 1 semantics: host round loop, one jitted select+walk call and

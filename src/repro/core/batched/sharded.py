@@ -35,17 +35,17 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.atlas import AnchorAtlas
 from repro.core.batched.bitmap import pack_bits
-from repro.core.batched.engine import (INF, BatchedParams, pack_query_batch,
-                                       search_batch)
+from repro.core.batched.engine import (INF, BatchedParams, _fence_pack,
+                                       pack_query_batch, search_batch)
 from repro.core.config import FnsConfig, coerce_config
 from repro.core.batched.insert import (InsertState, emit_device_atlas,
                                        insert_rows, make_shard_state)
 from repro.core.device_atlas import (DeviceAtlas, auto_v_cap,
                                      stack_atlases)
 from repro.core.graph import build_shard_graphs
-from repro.core.predicate import derived_vocab_sizes
+from repro.core.predicate import FilterExpr, derived_vocab_sizes
 from repro.core.types import Dataset, Query
-from repro.launch.mesh import index_axis_size
+from repro.launch.mesh import index_axis_size, query_axis_name
 from repro.launch.shardings import index_shardings
 from repro.models.common import shard_map
 
@@ -204,11 +204,24 @@ class ShardedEngine:
     """One-dispatch filtered search over a row-sharded index.
 
     ``search`` runs the fused per-shard ``search_batch`` under ``shard_map``
-    (queries replicated, index partitioned over the ``data`` axis), maps
-    local result ids to global ids, all-gathers the per-shard top-ks and
-    merges them on device — one jitted call, one host sync, mirroring
-    ``BatchedEngine.search``'s contract. ``dispatches`` counts compiled
-    invocations so tests can assert the one-dispatch property.
+    (index partitioned over the ``data`` axis), maps local result ids to
+    global ids, all-gathers the per-shard top-ks and merges them on device —
+    one jitted call, one host sync, mirroring ``BatchedEngine.search``'s
+    contract. ``dispatches`` counts compiled invocations so tests can
+    assert the one-dispatch property.
+
+    On a 1D mesh queries are replicated (every shard walks the whole
+    batch). On a 2D query×data mesh (DESIGN.md §13) the batch is further
+    partitioned over the query axis: each of the q_lanes lane groups walks
+    Q/q_lanes queries against all shards, so batch throughput scales with
+    the lane count instead of capping at one batch per mesh. Per-query
+    state in the fused program is row-independent and its batch-level
+    predicates only gate no-op rounds, so lane-partitioned results stay
+    bit-identical to the replicated layout and to ``search_reference``.
+
+    ``dispatch``/``collect`` split the batch into an async half (fenced
+    pack + jitted call, no host sync) and a sync half, so a serving
+    pipeline can overlap batch N+1's staging with batch N's device time.
     """
 
     def __init__(self, sindex: ShardedIndex, mesh, config=None,
@@ -228,9 +241,24 @@ class ShardedEngine:
         self.mesh, self.axis, self.p = mesh, axis, cfg.walk
         self._seed_backend = cfg.serve.seed_backend
         self._istate = sindex.insert_state
+        # 2D query×data layout (DESIGN.md §13): when the mesh carries a
+        # second axis of size > 1 from cfg.mesh.query_axes (a dedicated
+        # ``query`` axis, or ``model`` reused), the batch is partitioned
+        # into q_lanes blocks of Q/q_lanes queries, each walked against
+        # every data shard. q_lanes == 1 is the PR 3 replicated layout.
+        self.q_axis = (query_axis_name(mesh, cfg.mesh.query_axes)
+                       if mesh is not None and cfg.mesh.query_parallel
+                       else None)
+        self.q_lanes = (int(mesh.shape[self.q_axis])
+                        if self.q_axis is not None else 1)
         if mesh is not None:
-            sh = index_shardings(mesh, axis)
+            sh = index_shardings(mesh, axis, query_axis=self.q_axis)
             put = functools.partial(jax.device_put, device=sh["rows"])
+            # explicit query-side staging: dispatch() places the packed
+            # query tensors asynchronously so host->device transfer of
+            # batch N+1 overlaps batch N's device time
+            self._q_put = functools.partial(jax.device_put,
+                                            device=sh["queries"])
         else:
             # reference mode (DESIGN.md §10): no mesh — everything lives
             # on the default device and ``search`` runs the bit-identical
@@ -238,6 +266,7 @@ class ShardedEngine:
             # snapshot restores onto a machine with fewer than S devices
             # with zero rebuild and unchanged results.
             put = jnp.asarray
+            self._q_put = jnp.asarray
         self._put = put
         self.vectors = put(sindex.vectors)
         self.adjacency = put(sindex.adjacency)
@@ -258,6 +287,8 @@ class ShardedEngine:
                 cfg.serve.seed_backend, valid_bm=vbm, bounds=b,
                 kcfg=cfg.kernel))
         self.dispatches = 0
+        self.publish_generation = 0
+        self.fence_retries = 0
 
     def _build_program(self, has_bounds: bool):
         axis, p, sb = self.axis, self.p, self._seed_backend
@@ -284,12 +315,20 @@ class ShardedEngine:
                         hops=jax.lax.psum(out["hops"], axis),
                         walks=jax.lax.psum(out["walks"], axis))
 
-        # queries (and the bounds table, when the batch carries interval
-        # clauses) are replicated; everything else is partitioned row-wise
-        n_rep = 4 if has_bounds else 3
-        in_specs = tuple([P(axis)] * (nl + 5) + [P()] * n_rep)
+        # index leaves are partitioned row-wise over the data axis; the
+        # query tensors (and the bounds table, when the batch carries
+        # interval clauses) are replicated on a 1D mesh, or partitioned on
+        # their leading batch dim over the query axis on a 2D mesh — each
+        # lane then walks its Q/q_lanes block against every shard, and the
+        # all_gather/psum over ``axis`` stay within the lane's shard group.
+        # Outputs follow the queries: per-lane rows on the query axis.
+        q_spec = P(self.q_axis) if self.q_axis is not None else P()
+        n_q = 4 if has_bounds else 3
+        in_specs = tuple([P(axis)] * (nl + 5) + [q_spec] * n_q)
+        out_specs = dict(res_v=q_spec, res_i=q_spec,
+                         hops=q_spec, walks=q_spec)
         return jax.jit(shard_map(fn, mesh=self.mesh, in_specs=in_specs,
-                                 out_specs=P(), check_vma=False))
+                                 out_specs=out_specs, check_vma=False))
 
     def insert_batch(self, vectors: np.ndarray, metadata: np.ndarray, *,
                      gids: np.ndarray | None = None) -> np.ndarray:
@@ -344,6 +383,7 @@ class ShardedEngine:
         else:
             valid = np.stack([sl.valid for sl in st.shards])
         self.valid_bm = self._put(pack_bits(jnp.asarray(valid)))
+        self.publish_generation += 1
         return n
 
     def refresh_device(self, touched: list[int] | None = None) -> None:
@@ -403,6 +443,7 @@ class ShardedEngine:
         self._leaves, self._tdef = jax.tree_util.tree_flatten(datlas)
         self.n = st.next_gid
         self.vocab_sizes = st.expand_vocab(self.vocab_sizes)
+        self.publish_generation += 1
 
     @property
     def insert_stats(self) -> dict | None:
@@ -413,43 +454,75 @@ class ShardedEngine:
         host = jax.device_get(out)  # the batch's single host sync
         res_v, res_i = host["res_v"], host["res_i"]
         ids = [res_i[i][res_v[i] < INF / 2] for i in range(q_n)]
-        return ids, {"walks": host["walks"].astype(np.int32),
-                     "hops": host["hops"].astype(np.int64)}
+        # [:q_n] drops the inert lane-pad rows a 2D dispatch may append
+        return ids, {"walks": host["walks"][:q_n].astype(np.int32),
+                     "hops": host["hops"][:q_n].astype(np.int64)}
+
+    def _pack_queries(self, queries: list[Query]):
+        return pack_query_batch(queries, v_cap=self.v_cap,
+                                vocab_sizes=self.vocab_sizes)
+
+    def _pad_to_lanes(self, queries: list[Query]) -> list[Query]:
+        """Pad the batch to a multiple of the query-axis size (shard_map
+        needs the partitioned dim divisible by the axis). Pads are inert —
+        ``FilterExpr.never()`` admits no point, so they never seed — and
+        carry a unit basis vector: a zero vector would go NaN under cosine
+        normalization and could poison the lane's top-k merge."""
+        rem = len(queries) % self.q_lanes
+        if self.q_lanes == 1 or rem == 0:
+            return queries
+        basis = np.zeros(np.asarray(queries[0].vector).shape, np.float32)
+        basis[0] = 1.0
+        dummy = Query(vector=basis, predicate=FilterExpr.never())
+        return list(queries) + [dummy] * (self.q_lanes - rem)
+
+    def dispatch(self, queries: list[Query], seed: int = 0) -> dict:
+        """Fenced pack + ONE jitted shard_map call; returns an in-flight
+        token without syncing the host (see BatchedEngine.dispatch). The
+        packed query tensors are staged onto the mesh's query sharding
+        explicitly, so batch N+1's host->device transfer overlaps batch
+        N's device time. Reference mode (mesh=None) dispatches the
+        shard-at-a-time program instead — same token contract."""
+        del seed
+        q_n = len(queries)
+        padded = self._pad_to_lanes(queries)
+        packed, gen = _fence_pack(self, padded)
+        q_vecs, fields, allowed, bounds = packed
+        if self.mesh is None:
+            out = self._run_reference(q_vecs, fields, allowed, bounds)
+            self.dispatches += self.n_shards
+            return {"out": out, "q_n": q_n, "generation": gen}
+        q_args = [self._q_put(a) for a in (q_vecs, fields, allowed)]
+        args = (*self._leaves, self.vectors, self.adjacency,
+                self.metadata, self.global_ids, self.valid_bm, *q_args)
+        if bounds is None:
+            out = self._search(*args)
+        else:
+            if self._search_iv is None:
+                self._search_iv = self._build_program(has_bounds=True)
+            out = self._search_iv(*args, self._q_put(bounds))
+        self.dispatches += 1
+        return {"out": out, "q_n": q_n, "generation": gen}
+
+    def collect(self, token: dict):
+        """Sync an in-flight ``dispatch`` token: one host sync + result
+        post-processing. ``stats["generation"]`` is the scalar publish
+        generation the batch was dispatched against."""
+        ids, stats = self._fetch(token["out"], token["q_n"])
+        stats["generation"] = token["generation"]
+        return ids, stats
 
     def search(self, queries: list[Query], seed: int = 0):
         """Filtered top-k for a batch across all shards: one device
         dispatch, one host sync. Stats sum device work over shards (every
         shard walks every query)."""
         del seed
-        if self.mesh is None:
-            # reference mode: the same per-shard programs + merge, run
-            # shard-at-a-time on one device (one compiled invocation per
-            # shard instead of one shard_map dispatch)
-            out = self.search_reference(queries)
-            self.dispatches += self.n_shards
-            return out
-        q_vecs, fields, allowed, bounds = pack_query_batch(
-            queries, v_cap=self.v_cap, vocab_sizes=self.vocab_sizes)
-        args = (*self._leaves, self.vectors, self.adjacency,
-                self.metadata, self.global_ids, self.valid_bm,
-                q_vecs, fields, allowed)
-        if bounds is None:
-            out = self._search(*args)
-        else:
-            if self._search_iv is None:
-                self._search_iv = self._build_program(has_bounds=True)
-            out = self._search_iv(*args, bounds)
-        self.dispatches += 1
-        return self._fetch(out, len(queries))
+        return self.collect(self.dispatch(queries))
 
-    def search_reference(self, queries: list[Query]):
-        """Single-device fused baseline: the identical per-shard
-        ``search_batch`` programs run shard-at-a-time on the default
-        device, merged by the same ``merge_topk`` in the same shard order.
-        The mesh path must match this bit-for-bit (tested at selectivities
-        {0.5, 0.1, 0.02})."""
-        q_vecs, fields, allowed, bounds = pack_query_batch(
-            queries, v_cap=self.v_cap, vocab_sizes=self.vocab_sizes)
+    def _run_reference(self, q_vecs, fields, allowed, bounds):
+        """Shard-at-a-time device program behind both the reference-mode
+        ``dispatch`` and the ``search_reference`` oracle: the identical
+        per-shard fused programs + the identical merge, no host sync."""
         per_v, per_i, hops, walks = [], [], 0, 0
         for s in range(self.n_shards):
             datlas = jax.tree_util.tree_unflatten(
@@ -465,5 +538,14 @@ class ShardedEngine:
             walks = walks + out["walks"]
         res_v, res_i = merge_topk(jnp.stack(per_v), jnp.stack(per_i),
                                   self.p.k)
-        return self._fetch(dict(res_v=res_v, res_i=res_i, hops=hops,
-                                walks=walks), len(queries))
+        return dict(res_v=res_v, res_i=res_i, hops=hops, walks=walks)
+
+    def search_reference(self, queries: list[Query]):
+        """Single-device fused baseline: the identical per-shard
+        ``search_batch`` programs run shard-at-a-time on the default
+        device, merged by the same ``merge_topk`` in the same shard order.
+        The mesh path must match this bit-for-bit (tested at selectivities
+        {0.5, 0.1, 0.02} on 1D and 2D meshes)."""
+        q_vecs, fields, allowed, bounds = self._pack_queries(queries)
+        return self._fetch(self._run_reference(q_vecs, fields, allowed,
+                                               bounds), len(queries))

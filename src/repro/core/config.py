@@ -114,11 +114,31 @@ class KernelConfig:
 
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
-    """Serving-layer knobs: batch bucketing, seed backend, append room."""
+    """Serving-layer knobs: batch bucketing, seed backend, append room,
+    and the admission-queue/pipeline knobs (DESIGN.md §13)."""
 
     min_bucket: int = 4        # smallest padded batch bucket (was MIN_BUCKET)
     seed_backend: str = "topk"
     capacity: int | None = None  # append-slab rows; None = build-once
+    # admission queue (serve/pipeline.py): the batch-former cuts a batch
+    # when it holds queue_max_batch queries OR the oldest admitted query
+    # has waited queue_budget_ms — whichever comes first
+    queue_max_batch: int = 1024
+    queue_budget_ms: float = 5.0
+    # in-flight dispatch depth of the double-buffered pipeline: 2 = batch
+    # N+1's pack/compile overlaps batch N's device residence
+    queue_depth: int = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshConfig:
+    """2D query×data mesh knobs (DESIGN.md §13). ``query_axes`` names the
+    mesh axes eligible to carry query lanes, probed in order (a dedicated
+    ``query`` axis wins over reusing ``model``); ``query_parallel`` off
+    forces the 1D queries-replicated layout on any mesh."""
+
+    query_parallel: bool = True
+    query_axes: tuple = ("query", "model")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -162,6 +182,7 @@ class FnsConfig:
     kernel: KernelConfig = KernelConfig()
     serve: ServeConfig = ServeConfig()
     maintenance: MaintenanceConfig = MaintenanceConfig()
+    mesh: MeshConfig = MeshConfig()
 
     # -- flat addressing ----------------------------------------------------
 

@@ -50,6 +50,10 @@ POINTS = (
     # maintenance finished host-side work, device refresh not yet published
     # (MaintenanceLoop.step)
     "maintenance.pre-publish",
+    # serving has packed a query batch but not yet dispatched it — the
+    # window where a concurrent maintenance publish would make the packed
+    # tables stale (engine._fence_pack re-packs; DESIGN.md §13)
+    "serve.pre-dispatch",
 )
 
 

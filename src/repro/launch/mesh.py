@@ -23,6 +23,15 @@ def make_local_mesh(data: int = 1, model: int = 1):
     return jax.sharding.Mesh(devs, ("data", "model"))
 
 
+def make_serving_mesh(data: int = 1, query: int = 1):
+    """2D query×data serving mesh (DESIGN.md §13): the corpus is
+    row-partitioned over ``data`` and the query batch over ``query``, so
+    each of the ``query`` lanes walks Q/query queries against every data
+    shard. ``query=1`` degrades to the PR 3 queries-replicated layout."""
+    devs = np.asarray(jax.devices()[: data * query]).reshape(data, query)
+    return jax.sharding.Mesh(devs, ("data", "query"))
+
+
 def data_axis_names(mesh) -> tuple:
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
 
@@ -31,3 +40,21 @@ def index_axis_size(mesh, axis: str = "data") -> int:
     """Corpus shard count a sharded index gets on this mesh: the size of
     the row-partition axis (DESIGN.md §7), 1 when the mesh lacks it."""
     return int(mesh.shape[axis]) if axis in mesh.axis_names else 1
+
+
+def query_axis_name(mesh, candidates=("query", "model")) -> str | None:
+    """The mesh axis that carries query lanes (DESIGN.md §13): the first
+    candidate axis present with size > 1, else None (queries replicated).
+    A dedicated ``query`` axis wins over reusing ``model``."""
+    if mesh is None:
+        return None
+    for a in candidates:
+        if a in mesh.axis_names and int(mesh.shape[a]) > 1:
+            return a
+    return None
+
+
+def query_axis_size(mesh, candidates=("query", "model")) -> int:
+    """Number of query lanes the mesh provides (1 = replicated)."""
+    name = query_axis_name(mesh, candidates)
+    return int(mesh.shape[name]) if name is not None else 1

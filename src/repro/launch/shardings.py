@@ -143,15 +143,19 @@ def batch_shardings(cfg: ArchConfig, mesh, batch_specs, policy: str = "tp"):
     return jax.tree_util.tree_map_with_path(assign, batch_specs)
 
 
-def index_shardings(mesh, axis: str = "data") -> dict:
-    """Placement for the sharded search index (DESIGN.md §7): every
+def index_shardings(mesh, axis: str = "data", query_axis: str | None = None
+                    ) -> dict:
+    """Placement for the sharded search index (DESIGN.md §7/§13): every
     corpus-row-indexed leaf (vectors, adjacency, metadata, global ids,
     validity bitmaps, and all per-shard DeviceAtlas leaves) is partitioned
-    on its leading shard dim over the ``data`` axis; query-side inputs
-    (q_vecs, clause tables) stay replicated so every shard searches the
-    whole batch."""
+    on its leading shard dim over the ``data`` axis. Query-side inputs
+    (q_vecs, clause tables) are partitioned on their leading batch dim over
+    ``query_axis`` when the mesh carries one (2D query×data layout), else
+    replicated so every shard searches the whole batch."""
+    q_spec = P(query_axis) if query_axis is not None else P()
     return {"rows": NamedSharding(mesh, P(axis)),
-            "replicated": NamedSharding(mesh, P())}
+            "replicated": NamedSharding(mesh, P()),
+            "queries": NamedSharding(mesh, q_spec)}
 
 
 def cache_shardings(cfg: ArchConfig, mesh, cache_spec_tree):

@@ -104,7 +104,11 @@ class MaintenanceLoop:
         by ``budget_rows`` / ``repair_batch_rows``), then compaction of
         any shard past its tombstone threshold, then a drift-triggered
         recluster sweep. Returns {"kind", ...accounting}; kind "idle"
-        means there was nothing to do (and nothing was published)."""
+        means there was nothing to do (and nothing was published). A
+        published step also reports the engine's new ``generation`` —
+        the counter the serve path's dispatch fence checks, so an
+        in-flight batch either re-packs against this publish or carries
+        the pre-publish generation in its stats (DESIGN.md §13)."""
         st = self.engine.state
         m = self.mcfg
         touched: list[int] | None = None
@@ -148,6 +152,7 @@ class MaintenanceLoop:
         # host work done; the device publish is what makes it visible
         faults.fire("maintenance.pre-publish")
         self.engine.refresh_device(touched)
+        out["generation"] = getattr(self.engine, "publish_generation", None)
         return out
 
     def run_until_idle(self, max_steps: int | None = None) -> dict:

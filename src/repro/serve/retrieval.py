@@ -23,7 +23,7 @@ from repro.core.graph import build_alpha_knn
 from repro.core.predicate import FilterExpr
 from repro.core.search import FiberIndex, SearchParams, search
 from repro.core.types import Dataset, FilterPredicate, Query, normalize
-from repro.launch.mesh import index_axis_size
+from repro.launch.mesh import index_axis_size, query_axis_name
 from repro.models.transformer import ShardEnv, encode
 
 # singleton (and any sub-minimum) arrivals pad up to this bucket so a
@@ -199,12 +199,24 @@ class RetrievalService:
     def _mesh_shards(self) -> int:
         return index_axis_size(self.mesh) if self.mesh is not None else 1
 
+    def _mesh_parallel(self) -> bool:
+        """True when the mesh warrants the sharded engine: >1 corpus shard
+        on the data axis, or >1 query lane on a query axis (a data=1 2D
+        mesh still wants the shard_map program for query parallelism)."""
+        if self.mesh is None:
+            return False
+        if self._mesh_shards() > 1:
+            return True
+        cfg = self._cfg()
+        return (cfg.mesh.query_parallel and
+                query_axis_name(self.mesh, cfg.mesh.query_axes) is not None)
+
     def _live_engine(self):
         """The engine the batched paths route to: by mesh shape, except
         that an engine attached by snapshot restore wins — a multi-shard
         state recovered onto a meshless process serves through the sharded
         engine's reference mode, not a freshly built global engine."""
-        if self._mesh_shards() > 1:
+        if self._mesh_parallel():
             return self.sharded_engine()
         if self._sharded is not None:
             return self._sharded
@@ -235,12 +247,14 @@ class RetrievalService:
         bounded DNF on pack; DESIGN.md §8).
 
         With ``bucket`` (default), the batch is padded to the next
-        power-of-two — and at least ``MIN_BUCKET``, so singleton arrivals
-        share the smallest bucket's program instead of compiling their own
-        — with inert dummy queries (zero vector, ``FilterExpr.never()``:
-        they never seed, walk, or affect the loop); results are sliced back
-        to the real queries. An empty batch returns ``([], {})`` without
-        touching the engine. Returns (list of id arrays, stats dict).
+        power-of-two — at least ``MIN_BUCKET``, so singleton arrivals
+        share the smallest bucket's program instead of compiling their
+        own, and rounded up to a multiple of the engine's query-lane count
+        on a 2D mesh — with inert dummy queries (unit basis vector,
+        ``FilterExpr.never()``: they never seed, walk, or affect the
+        loop); results are sliced back to the real queries. An empty batch
+        returns ``([], {})`` without touching the engine. Returns (list of
+        id arrays, stats dict).
 
         Per-query compile failures (e.g. an expression whose DNF exceeds
         MAX_DISJUNCTS) do NOT kill the batch: the offending query is
@@ -248,6 +262,19 @@ class RetrievalService:
         message is recorded in ``stats["errors"]`` at that query's slot
         (None for queries that compiled; the key is present only when at
         least one query failed)."""
+        formed = self._form_batch(vectors, predicates, bucket=bucket)
+        if formed is None:
+            return [], {}
+        eng, queries, q_real, errors = formed
+        ids, stats = eng.search(queries)
+        return self._finish_batch(eng, ids, stats, q_real, len(queries),
+                                  errors)
+
+    def _form_batch(self, vectors, predicates, *, bucket: bool):
+        """Shared batch former for ``query_batch`` and ``dispatch_batch``:
+        validate, per-query predicate compile (failures isolated into the
+        errors list), normalize, and bucket-pad. Returns
+        (engine, queries, q_real, errors), or None for an empty batch."""
         if len(vectors) != len(predicates):
             raise ValueError(
                 f"query_batch got {len(vectors)} vectors but "
@@ -255,7 +282,7 @@ class RetrievalService:
                 f"vector is required")
         q_real = len(predicates)
         if q_real == 0:
-            return [], {}
+            return None
         eng = self._live_engine()
         v_cap = eng.v_cap if hasattr(eng, "v_cap") else eng.datlas.v_cap
         errors: list[str | None] = [None] * q_real
@@ -270,22 +297,72 @@ class RetrievalService:
         queries = [Query(vector=v, predicate=p)
                    for v, p in zip(normalize(vectors), checked)]
         if bucket:
+            lanes = getattr(eng, "q_lanes", 1)
             target = max(MIN_BUCKET, 1 << (q_real - 1).bit_length())
+            # round the bucket UP to a multiple of the query-axis size so
+            # a 2D-mesh dispatch needs no extra lane padding and every
+            # lane walks the same block height (DESIGN.md §13)
+            target = -(-target // lanes) * lanes
             if target > q_real:
-                dummy = Query(vector=np.zeros_like(queries[0].vector),
-                              predicate=FilterExpr.never())
+                # unit basis vector, NOT zeros: a zero vector has zero
+                # norm, so cosine normalization would turn it into NaNs
+                # that poison the lane's all-gather top-k merge; the pad
+                # stays inert through FilterExpr.never() regardless
+                basis = np.zeros_like(queries[0].vector)
+                basis[0] = 1.0
+                dummy = Query(vector=basis, predicate=FilterExpr.never())
                 queries = queries + [dummy] * (target - q_real)
-        ids, stats = eng.search(queries)
-        stats = {k: v[:q_real] for k, v in stats.items()}
+        return eng, queries, q_real, errors
+
+    def _finish_batch(self, eng, ids, stats, q_real: int, q_padded: int,
+                      errors):
+        """Shared result post-processing: slice ONLY the stats that carry
+        a per-query leading axis back to the real queries — scalar and
+        aggregate stats (the publish generation, maintenance lag) pass
+        through untouched, where the old blanket ``v[:q_real]`` mangled
+        them — then attach the service-level stats."""
+        stats = {k: (v[:q_real]
+                     if isinstance(v, np.ndarray) and v.ndim >= 1
+                     and len(v) == q_padded else v)
+                 for k, v in stats.items()}
         st = _engine_state(eng)
         if st is not None:
             # deferred work a result set might observe: un-repaired rows
-            # plus tombstones still holding slab slots (DESIGN.md §12) —
-            # a scalar, added after the per-query stat slicing above
+            # plus tombstones still holding slab slots (DESIGN.md §12)
             stats["maintenance_lag"] = st.pending_rows + st.tombstones
         if any(e is not None for e in errors):
             stats["errors"] = errors
         return ids[:q_real], stats
+
+    def dispatch_batch(self, vectors: np.ndarray,
+                       predicates: "list[FilterPredicate | FilterExpr]", *,
+                       bucket: bool = True):
+        """Async half of ``query_batch`` (the serve pipeline's staging
+        stage, DESIGN.md §13): batch forming + predicate compilation +
+        fenced pack + device dispatch, NO host sync — jax's async dispatch
+        returns while the device is still walking, so the caller can stage
+        batch N+1 during batch N's device time. Returns an opaque ticket
+        for ``collect_batch`` (None for an empty batch)."""
+        formed = self._form_batch(vectors, predicates, bucket=bucket)
+        if formed is None:
+            return None
+        eng, queries, q_real, errors = formed
+        return {"eng": eng, "token": eng.dispatch(queries),
+                "q_real": q_real, "q_padded": len(queries),
+                "errors": errors}
+
+    def collect_batch(self, ticket):
+        """Sync half of ``query_batch``: one host sync on the in-flight
+        ticket + the same result post-processing ``query_batch`` applies.
+        The ticket pins the engine and generation it was dispatched
+        against, so a maintenance publish landing mid-flight cannot
+        corrupt this batch's results."""
+        if ticket is None:
+            return [], {}
+        ids, stats = ticket["eng"].collect(ticket["token"])
+        return self._finish_batch(ticket["eng"], ids, stats,
+                                  ticket["q_real"], ticket["q_padded"],
+                                  ticket["errors"])
 
     def _validate_ingest(self, vectors, metadata,
                          eng) -> tuple[np.ndarray, np.ndarray]:

@@ -395,7 +395,10 @@ def test_maintenance_loop_budget_and_priorities():
     assert w["repair_backlog_rows"] == 40
     assert w["compactable_shards"] == 1
     out = loop.step(budget_rows=16)  # backlog outranks compaction
-    assert out == {"kind": "repair", "rows": 16, "remaining": 24}
+    assert out["kind"] == "repair" and out["rows"] == 16
+    assert out["remaining"] == 24
+    # a published step reports the generation the serve fence checks
+    assert out["generation"] == eng.publish_generation
     total = loop.run_until_idle()
     assert loop.idle
     assert loop.repaired_rows == 40
